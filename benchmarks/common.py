@@ -1,0 +1,20 @@
+"""Shared benchmark utilities: CSV emission per the harness contract
+(``name,us_per_call,derived``)."""
+import sys
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()
+
+
+def time_call(fn, *args, repeat: int = 3, **kw):
+    """Median wall time in microseconds."""
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]

@@ -1,0 +1,40 @@
+"""Paper Fig. 4 — strong scaling of the two workloads.
+
+The paper measures Jacobi2D (communication-bound) and LeanMD (compute-bound)
+on EKS.  Here: (a) the calibrated analytic Jacobi model that feeds the
+simulator (exact paper grid sizes), and (b) real measured step times of a JAX
+Jacobi2D stencil (examples/jacobi2d_elastic.py's kernel) across problem sizes
+on this host — the measured column is the "LeanMD-like compute scaling" stand-
+in since a 1-core container cannot show multi-replica speedup honestly.
+"""
+from benchmarks.common import emit, time_call
+
+
+def run():
+    from repro.core.perf_model import JACOBI_SIZES, JacobiModel
+
+    for size, d in JACOBI_SIZES.items():
+        m = JacobiModel(d["grid_n"], d["timesteps"])
+        for p in (1, 2, 4, 8, 16, 32, 64):
+            t = m.time_per_step(p)
+            emit(f"fig4.jacobi_model.{size}.p{p}", t * 1e6,
+                 f"speedup_vs_1={m.time_per_step(1) / t:.2f}")
+
+    # real stencil step on this host (single device), problem-size scaling
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def jacobi_step(grid):
+        up = jnp.roll(grid, 1, 0)
+        down = jnp.roll(grid, -1, 0)
+        left = jnp.roll(grid, 1, 1)
+        right = jnp.roll(grid, -1, 1)
+        return 0.25 * (up + down + left + right)
+
+    for n in (256, 512, 1024, 2048):
+        g = jnp.zeros((n, n))
+        jacobi_step(g).block_until_ready()          # compile
+        us = time_call(lambda: jacobi_step(g).block_until_ready(), repeat=5)
+        emit(f"fig4.jacobi_measured.n{n}", us,
+             f"mpoints_per_s={n * n / us:.1f}")

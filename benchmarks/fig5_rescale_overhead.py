@@ -1,0 +1,73 @@
+"""Paper Fig. 5 — rescale overhead decomposed into the four stages
+(load-balance / checkpoint / restart / restore).
+
+(a) REAL measurements: ElasticTrainer shrink/expand on virtual devices
+    (subprocess, 8 devices) across replica counts and model sizes — the JAX
+    analog of the paper's Jacobi runs, including the paper's headline
+    findings (restart dominates small problems; in-memory ckpt/restore cheap).
+(b) The calibrated analytic model the simulator uses (paper shapes 5a/5b/5c).
+"""
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+HELPER = r"""
+import json, sys
+import jax
+from repro.configs import smoke_config
+from repro.core.elastic import ElasticTrainer, TrainJobConfig
+
+devs = jax.devices()
+out = []
+for arch, width in [("yi-6b", 64), ("yi-6b", 128)]:
+    cfg = smoke_config(arch).with_(d_model=width, expected_params=0.0)
+    for r0, r1 in [(4, 2), (2, 4), (8, 4), (4, 8)]:
+        tr = ElasticTrainer(cfg, TrainJobConfig(global_batch=8, seq_len=32,
+                                                total_steps=4, seed=0),
+                            devs[:r0])
+        tr.step()
+        t = tr.rescale(devs[:r1])
+        out.append(dict(width=width, r0=r0, r1=r1, **t.as_dict()))
+print("JSON" + json.dumps(out))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath("src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", HELPER],
+                          capture_output=True, text=True, timeout=1800,
+                          env=env)
+    rows = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("JSON"):
+            rows = json.loads(line[4:])
+    for r in rows:
+        kind = "shrink" if r["r1"] < r["r0"] else "expand"
+        name = f"fig5.live.{kind}.w{r['width']}.{r['r0']}to{r['r1']}"
+        emit(name, r["total"] * 1e6,
+             f"lb={r['load_balance']:.3f};ckpt={r['checkpoint']:.3f};"
+             f"restart={r['restart']:.3f};restore={r['restore']:.3f}")
+    if not rows:
+        emit("fig5.live.FAILED", 0.0, proc.stderr[-200:].replace(",", ";"))
+
+    # analytic model (paper Fig. 5a/5b/5c shapes)
+    from repro.core.perf_model import RescaleModel
+    rm = RescaleModel()
+    for p in (4, 8, 16, 32, 64):                      # 5a: shrink p -> p/2
+        st = rm.stages(p, p // 2, 2 * 4.0 * 8192 ** 2)
+        emit(f"fig5.model.shrink_half.p{p}", sum(st.values()) * 1e6,
+             ";".join(f"{k}={v:.3f}" for k, v in st.items()))
+    for p in (4, 8, 16, 32):                          # 5b: expand p -> 2p
+        st = rm.stages(p, 2 * p, 2 * 4.0 * 8192 ** 2)
+        emit(f"fig5.model.expand_double.p{p}", sum(st.values()) * 1e6,
+             ";".join(f"{k}={v:.3f}" for k, v in st.items()))
+    for n in (1024, 4096, 8192, 16384, 23000):        # 5c: 32 -> 16, size sweep
+        st = rm.stages(32, 16, 2 * 4.0 * n ** 2)
+        emit(f"fig5.model.shrink32to16.n{n}", sum(st.values()) * 1e6,
+             ";".join(f"{k}={v:.3f}" for k, v in st.items()))

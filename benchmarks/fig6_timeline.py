@@ -1,0 +1,66 @@
+"""Paper Fig. 6 — per-iteration timeline across a shrink and an expand.
+
+Real run on virtual devices: iteration times rise after shrink, fall after
+expand; the rescale gaps are the measured overheads.
+"""
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+HELPER = r"""
+import json, time
+import jax
+from repro.configs import smoke_config
+from repro.core.elastic import ElasticTrainer, TrainJobConfig
+
+devs = jax.devices()
+cfg = smoke_config("yi-6b").with_(d_model=128, num_layers=4, expected_params=0.0)
+tr = ElasticTrainer(cfg, TrainJobConfig(global_batch=8, seq_len=64,
+                                        total_steps=30, seed=0), devs[:4])
+events = []
+def run_steps(n):
+    for _ in range(n):
+        t0 = time.perf_counter()
+        tr.step()
+        events.append(("step", tr.replicas, time.perf_counter() - t0))
+run_steps(8)
+t = tr.rescale(devs[:2])
+events.append(("shrink", 2, t.total))
+run_steps(8)
+t = tr.rescale(devs[:4])
+events.append(("expand", 4, t.total))
+run_steps(8)
+print("JSON" + json.dumps(events))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath("src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", HELPER],
+                          capture_output=True, text=True, timeout=1800,
+                          env=env)
+    events = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("JSON"):
+            events = json.loads(line[4:])
+    if not events:
+        emit("fig6.timeline.FAILED", 0.0, proc.stderr[-200:].replace(",", ";"))
+        return
+    phase, buf = 0, []
+    for kind, replicas, dt in events:
+        if kind == "step":
+            buf.append(dt)
+        else:
+            emit(f"fig6.phase{phase}.steps.r{buf and len(buf)}",
+                 1e6 * sum(buf) / len(buf), f"replicas_before={replicas}")
+            emit(f"fig6.{kind}", dt * 1e6, f"to_replicas={replicas}")
+            phase += 1
+            buf = []
+    if buf:
+        emit(f"fig6.phase{phase}.steps", 1e6 * sum(buf) / len(buf), "")

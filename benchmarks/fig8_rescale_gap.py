@@ -1,0 +1,29 @@
+"""Paper Fig. 8 — scheduler metrics vs. T_rescale_gap (submission gap 180 s)."""
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def run(seeds=range(12), tgaps=(0, 60, 180, 300, 600, 900, 1200)):
+    import time
+
+    from repro.core.simulator import VARIANTS, make_jacobi_jobs, run_variant
+
+    for tg in tgaps:
+        for v in ("elastic", "moldable", "rigid_min"):
+            rows = []
+            us = 0.0
+            for seed in seeds:
+                specs = make_jacobi_jobs(seed=seed, n_jobs=16,
+                                         submission_gap=180.0)
+                t0 = time.perf_counter()
+                m = run_variant(v, specs, total_slots=64,
+                                rescale_gap=float(tg))
+                us += (time.perf_counter() - t0) * 1e6
+                rows.append([m.total_time, m.utilization,
+                             m.weighted_mean_response,
+                             m.weighted_mean_completion, m.rescale_count])
+            a = np.mean(rows, axis=0)
+            emit(f"fig8.tgap{tg}.{v}", us / len(list(seeds)),
+                 f"total={a[0]:.0f};util={a[1]:.3f};resp={a[2]:.1f};"
+                 f"compl={a[3]:.1f};rescales={a[4]:.1f}")

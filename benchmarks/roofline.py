@@ -1,0 +1,35 @@
+"""Roofline summary — reads results/dryrun.json (produced by
+``python -m repro.launch.dryrun --all``) and emits the per-cell terms.
+Run the dry-run first; this benchmark only reports."""
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(path: str = "results/dryrun.json"):
+    if not os.path.exists(path):
+        emit("roofline.MISSING", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    with open(path) as f:
+        data = json.load(f)
+    for key in sorted(data):
+        rec = data[key]
+        if rec.get("status") == "skipped":
+            emit(f"roofline.{rec['arch']}.{rec['shape']}.skipped", 0.0,
+                 rec.get("reason", "")[:80].replace(",", ";"))
+            continue
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        rl = rec["roofline"]
+        mesh = rec.get("mesh", "?")
+        step_us = rl["step_time_lower_bound"] * 1e6
+        emit(f"roofline.{rec['arch']}.{rec['shape']}.{mesh}", step_us,
+             f"bottleneck={rl['bottleneck']};"
+             f"tc={rl['t_compute']:.4f};tm={rl['t_memory']:.4f};"
+             f"tx={rl['t_collective']:.4f};"
+             f"useful={rl['useful_flops_fraction']:.3f};"
+             f"mfu_bound={rl['mfu_bound']:.3f};"
+             f"mem_gb={rec.get('memory', {}).get('peak_bytes', 0) / 1e9:.1f};"
+             f"fits={rec.get('fits_hbm')}")

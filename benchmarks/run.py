@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,table1] [--fast]
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("fig4", "benchmarks.fig4_scaling"),
+    ("fig5", "benchmarks.fig5_rescale_overhead"),
+    ("fig6", "benchmarks.fig6_timeline"),
+    ("fig7", "benchmarks.fig7_submission_gap"),
+    ("fig8", "benchmarks.fig8_rescale_gap"),
+    ("table1", "benchmarks.table1_policies"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer seeds for the simulation sweeps")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    print("name,us_per_call,derived")
+    for name, module in MODULES:
+        if only and name not in only:
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(module)
+            if args.fast and name in ("fig7", "fig8"):
+                mod.run(seeds=range(3))
+            else:
+                mod.run()
+        except Exception as e:
+            print(f"{name}.ERROR,0.0,{e!r}"[:400].replace("\n", " "))
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

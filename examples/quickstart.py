@@ -1,0 +1,43 @@
+"""Quickstart: train a small LM end-to-end with the public API.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch yi-6b] [--steps 30]
+
+Uses the reduced (smoke) variant of the chosen architecture so it runs on a
+laptop/CI CPU in ~a minute; pass --full on real hardware.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.core.elastic import ElasticTrainer, TrainJobConfig
+
+    cfg = get_config(args.arch) if args.full else smoke_config(args.arch)
+    job = TrainJobConfig(global_batch=8, seq_len=64, total_steps=args.steps,
+                         seed=0, peak_lr=3e-3)
+    trainer = ElasticTrainer(cfg, job, jax.devices())
+    n = sum(x.size for x in jax.tree.leaves(trainer.params))
+    print(f"training {cfg.name}: {n:,} params on {len(jax.devices())} device(s)")
+    while not trainer.done:
+        m = trainer.step()
+        if m["step"] % 5 == 0 or trainer.done:
+            print(f"  step {m['step']:4d}  loss {m['loss']:.4f}  "
+                  f"lr {m['lr']:.2e}  grad_norm {m['grad_norm']:.2f}")
+    losses = [m["loss"] for m in trainer.metrics_log]
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Reproduce the paper's simulation study (Figs. 7, 8 and Table 1 sim
+columns) — the C3 artifact.
+
+    PYTHONPATH=src python examples/scheduler_sim.py [--seeds 100]
+
+With --seeds 100 this is the paper's full experiment (~a minute); the default
+uses 20 seeds for a quick look.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=20)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.core.simulator import (VARIANTS, make_jacobi_jobs, run_variant)
+
+    def sweep(label, gaps, tgap=None, gap=None):
+        print(f"\n=== {label} ===")
+        hdr = f"{'policy':10s}" + "".join(f"{g:>22}" for g in gaps)
+        print(hdr)
+        for metric_i, metric in enumerate(
+                ["total", "util", "resp", "compl"]):
+            print(f"-- {metric}")
+            for v in VARIANTS:
+                cells = []
+                for g in gaps:
+                    rows = []
+                    for seed in range(args.seeds):
+                        specs = make_jacobi_jobs(seed=seed, n_jobs=16,
+                                                 submission_gap=float(
+                                                     g if tgap is None else gap))
+                        m = run_variant(
+                            v, specs, total_slots=64,
+                            rescale_gap=float(g if tgap is not None else 180.0))
+                        rows.append([m.total_time, m.utilization,
+                                     m.weighted_mean_response,
+                                     m.weighted_mean_completion])
+                    cells.append(np.mean(rows, axis=0)[metric_i])
+                fmt = "{:>22.2%}" if metric == "util" else "{:>22.1f}"
+                print(f"{v:10s}" + "".join(fmt.format(c) for c in cells))
+
+    # Fig. 7: submission-gap sweep
+    sweep("Fig. 7 — vary submission gap (T_rescale_gap=180s)",
+          [0, 60, 120, 180, 240, 300])
+    # Fig. 8: T_rescale_gap sweep
+    sweep("Fig. 8 — vary T_rescale_gap (submission gap=180s)",
+          [0, 180, 600, 1200], tgap=True, gap=180.0)
+
+    # Table 1 (sim columns), one configuration
+    print("\n=== Table 1 (simulation) — gap=90s, T_rescale_gap=180s ===")
+    specs = make_jacobi_jobs(seed=7, n_jobs=16, submission_gap=90.0)
+    for v in VARIANTS:
+        m = run_variant(v, specs, total_slots=64, rescale_gap=180.0)
+        print(f"{v:10s} {m.row()}")
+
+
+if __name__ == "__main__":
+    main()

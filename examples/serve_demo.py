@@ -1,0 +1,25 @@
+"""Batched serving demo: prefill + greedy decode on any architecture
+(smoke-size on CPU), including the MLA latent-cache path and the SSM
+recurrent-state path.
+
+    PYTHONPATH=src python examples/serve_demo.py --arch deepseek-v2-236b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-236b")
+    args = ap.parse_args()
+    sys.argv = ["serve", "--arch", args.arch, "--smoke", "--batch", "4",
+                "--prompt-len", "16", "--gen", "12"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.checkpoint.memory import MemoryCheckpointStore
+from repro.checkpoint.disk import DiskCheckpointStore
+from repro.checkpoint.reshard import (device_reshard, flatten_tree,
+                                      restore_from_host, snapshot_to_host,
+                                      unflatten_tree)
+
+__all__ = ["MemoryCheckpointStore", "DiskCheckpointStore", "device_reshard",
+           "snapshot_to_host", "restore_from_host", "flatten_tree",
+           "unflatten_tree"]

@@ -1,0 +1,44 @@
+"""In-memory checkpoint store — the /dev/shm analog (paper §3.1).
+
+Charm++ checkpoints rescale state to Linux shared memory to avoid disk; here
+the equivalent is a host-RAM dict of numpy arrays per job.  No persistent
+volume, no filesystem.  ``nbytes`` feeds the rescale-overhead benchmarks
+(paper Fig. 5 analog).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.checkpoint.reshard import snapshot_to_host
+
+
+class MemoryCheckpointStore:
+    def __init__(self):
+        self._store: Dict[str, Dict[str, np.ndarray]] = {}
+        self._meta: Dict[str, dict] = {}
+
+    def save(self, job_id: str, tree, meta: Optional[dict] = None) -> float:
+        """Checkpoint ``tree`` under ``job_id``; returns seconds taken."""
+        t0 = time.perf_counter()
+        self._store[job_id] = snapshot_to_host(tree)
+        self._meta[job_id] = dict(meta or {}, saved_at=time.time())
+        return time.perf_counter() - t0
+
+    def load(self, job_id: str) -> Dict[str, np.ndarray]:
+        return self._store[job_id]
+
+    def meta(self, job_id: str) -> dict:
+        return self._meta[job_id]
+
+    def nbytes(self, job_id: str) -> int:
+        return sum(a.nbytes for a in self._store[job_id].values())
+
+    def delete(self, job_id: str):
+        self._store.pop(job_id, None)
+        self._meta.pop(job_id, None)
+
+    def __contains__(self, job_id: str) -> bool:
+        return job_id in self._store

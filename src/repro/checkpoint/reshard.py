@@ -1,0 +1,55 @@
+"""Cross-mesh resharding of pytrees — the mechanism behind shrink/expand.
+
+Two paths (DESIGN.md §2):
+
+- paper-faithful: ``snapshot_to_host`` (checkpoint to host RAM, the /dev/shm
+  analog) then ``restore_from_host`` with the new mesh's shardings;
+- beyond-paper: ``device_reshard`` — a single ``jax.device_put`` straight onto
+  the new shardings, letting the runtime move bytes device-to-device.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+
+def flatten_tree(tree, prefix: str = "") -> Dict[str, object]:
+    """pytree -> flat {'a/b/c': leaf} dict (stable, path-keyed)."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[prefix + key] = leaf
+    return flat
+
+
+def unflatten_tree(template, flat: Dict[str, object], prefix: str = ""):
+    """Rebuild a pytree shaped like ``template`` from a flat dict."""
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = []
+    for path, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        leaves.append(flat[prefix + key])
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def snapshot_to_host(tree) -> Dict[str, np.ndarray]:
+    """Device -> host-RAM snapshot (the paper's shared-memory checkpoint)."""
+    flat = flatten_tree(tree)
+    arrs = jax.device_get(list(flat.values()))
+    return {k: np.asarray(v) for k, v in zip(flat.keys(), arrs)}
+
+
+def restore_from_host(host_flat: Dict[str, np.ndarray], template, shardings):
+    """Host snapshot -> device arrays under ``shardings`` (new mesh)."""
+    tree = unflatten_tree(template, host_flat)
+    return jax.device_put(tree, shardings)
+
+
+def device_reshard(tree, shardings):
+    """Live device-to-device reshard (no host round-trip)."""
+    return jax.device_put(tree, shardings)

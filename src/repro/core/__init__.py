@@ -1,0 +1,28 @@
+"""The paper's primary contribution: an elastic, priority-based job scheduler
+for malleable (shrink/expand-able) parallel jobs, plus the runtime that makes
+JAX training jobs malleable and the simulator used for policy evaluation.
+
+- C1 (shrink/expand):   core.elastic.ElasticTrainer
+- C2 (operator+policy): core.operator.ElasticClusterController, core.policies
+- C3 (simulator):       core.simulator
+Beyond-paper:           core.autoscale (aging, cost-benefit, preemption)
+"""
+from repro.core.autoscale import AgingPolicy, CostBenefitPolicy, PreemptingPolicy
+from repro.core.cluster import Cluster
+from repro.core.elastic import ElasticTrainer, RescaleTimings, TrainJobConfig
+from repro.core.job import JobSpec, JobState, JobStatus
+from repro.core.metrics import ScheduleMetrics, UtilizationLog, compute_metrics
+from repro.core.operator import ElasticClusterController
+from repro.core.policies import Actions, ElasticPolicy, PolicyConfig
+from repro.core.simulator import (Simulator, SimWorkload, VARIANTS,
+                                  jacobi_workload, make_jacobi_jobs,
+                                  run_variant)
+
+__all__ = [
+    "AgingPolicy", "CostBenefitPolicy", "PreemptingPolicy", "Cluster",
+    "ElasticTrainer", "RescaleTimings", "TrainJobConfig", "JobSpec",
+    "JobState", "JobStatus", "ScheduleMetrics", "UtilizationLog",
+    "compute_metrics", "ElasticClusterController", "Actions", "ElasticPolicy",
+    "PolicyConfig", "Simulator", "SimWorkload", "VARIANTS", "jacobi_workload",
+    "make_jacobi_jobs", "run_variant",
+]

@@ -1,0 +1,102 @@
+"""Cluster slot accounting + device-range allocation.
+
+A *slot* is the malleability quantum: one worker replica (paper: one pod/PE;
+here: one model-parallel device group — DESIGN.md §2).  The live operator
+additionally tracks which concrete JAX devices back each slot; the simulator
+only counts.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.job import JobState, JobStatus
+
+
+class Cluster:
+    def __init__(self, total_slots: int, devices: Optional[Sequence] = None,
+                 devices_per_slot: int = 1):
+        self.total_slots = total_slots
+        self.jobs: Dict[str, JobState] = {}
+        self.devices = list(devices) if devices is not None else None
+        self.devices_per_slot = devices_per_slot
+        if self.devices is not None:
+            assert len(self.devices) >= total_slots * devices_per_slot
+        # slot index -> job_id (None = free); contiguous ranges preferred
+        self._slot_owner: List[Optional[str]] = [None] * total_slots
+
+    # --- accounting -------------------------------------------------------
+    @property
+    def used_slots(self) -> int:
+        return sum(j.replicas for j in self.jobs.values()
+                   if j.status == JobStatus.RUNNING)
+
+    @property
+    def free_slots(self) -> int:
+        return self.total_slots - self.used_slots
+
+    def add_job(self, job: JobState):
+        assert job.job_id not in self.jobs, job.job_id
+        self.jobs[job.job_id] = job
+
+    def running_jobs(self) -> List[JobState]:
+        """Sorted by DECREASING priority (paper's runningJobs list)."""
+        out = [j for j in self.jobs.values() if j.status == JobStatus.RUNNING]
+        out.sort(key=JobState.sort_key)
+        return out
+
+    def queued_jobs(self) -> List[JobState]:
+        out = [j for j in self.jobs.values() if j.status == JobStatus.QUEUED]
+        out.sort(key=JobState.sort_key)
+        return out
+
+    def all_schedulable_jobs(self) -> List[JobState]:
+        """Running + queued, decreasing priority (paper's allJobs list)."""
+        out = [j for j in self.jobs.values()
+               if j.status in (JobStatus.RUNNING, JobStatus.QUEUED)]
+        out.sort(key=JobState.sort_key)
+        return out
+
+    # --- device-range allocation (live operator) ---------------------------
+    def allocate_slots(self, job_id: str, n: int) -> List[int]:
+        """Grab n slots, preferring a contiguous range (ICI-locality analog of
+        the paper's pod affinity)."""
+        free = [i for i, o in enumerate(self._slot_owner) if o is None]
+        assert len(free) >= n, (job_id, n, len(free))
+        # longest contiguous run first
+        runs, cur = [], [free[0]]
+        for a, b in zip(free, free[1:]):
+            if b == a + 1:
+                cur.append(b)
+            else:
+                runs.append(cur)
+                cur = [b]
+        runs.append(cur)
+        runs.sort(key=len, reverse=True)
+        chosen: List[int] = []
+        for run in runs:
+            take = min(n - len(chosen), len(run))
+            chosen.extend(run[:take])
+            if len(chosen) == n:
+                break
+        for i in chosen:
+            self._slot_owner[i] = job_id
+        return sorted(chosen)
+
+    def release_slots(self, job_id: str, keep: int = 0) -> List[int]:
+        """Free all but ``keep`` of a job's slots (highest indices first)."""
+        owned = [i for i, o in enumerate(self._slot_owner) if o == job_id]
+        to_free = owned[keep:] if keep else owned
+        for i in to_free:
+            self._slot_owner[i] = None
+        return to_free
+
+    def slots_of(self, job_id: str) -> List[int]:
+        return [i for i, o in enumerate(self._slot_owner) if o == job_id]
+
+    def devices_for_slots(self, slots: Sequence[int]) -> list:
+        assert self.devices is not None
+        out = []
+        for s in slots:
+            out.extend(self.devices[s * self.devices_per_slot:
+                                    (s + 1) * self.devices_per_slot])
+        return out

@@ -1,0 +1,35 @@
+"""Tiny deterministic event queue (virtual or wall clock)."""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+
+@dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: Any = field(compare=False, default=None)
+
+
+class EventQueue:
+    def __init__(self):
+        self._heap = []
+        self._count = itertools.count()
+
+    def push(self, time: float, kind: str, payload: Any = None) -> Event:
+        ev = Event(time, next(self._count), kind, payload)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Optional[Event]:
+        return heapq.heappop(self._heap) if self._heap else None
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0].time if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)

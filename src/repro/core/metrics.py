@@ -1,0 +1,82 @@
+"""Scheduler evaluation metrics (paper §4.3).
+
+- total time: first submission -> last completion
+- cluster utilization: time-averaged used/total slots over that window
+- weighted mean response time: sum(priority * (start - submit)) / sum(priority)
+- weighted mean completion time: same with (end - submit)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.job import JobState, completion_time, response_time
+
+
+@dataclass
+class UtilizationLog:
+    total_slots: int
+    events: List[Tuple[float, int]] = field(default_factory=list)  # (t, used)
+
+    def record(self, t: float, used: int):
+        if self.events and self.events[-1][0] == t:
+            self.events[-1] = (t, used)
+        else:
+            self.events.append((t, used))
+
+    def average(self, t0: float, t1: float) -> float:
+        if t1 <= t0 or not self.events:
+            return 0.0
+        area = 0.0
+        used = 0
+        prev = t0
+        for t, u in self.events:
+            if t <= t0:
+                used = u
+                continue
+            tc = min(t, t1)
+            area += used * max(0.0, tc - prev)
+            prev = max(prev, tc)
+            used = u
+            if t >= t1:
+                break
+        area += used * max(0.0, t1 - prev)
+        return area / (self.total_slots * (t1 - t0))
+
+    def profile(self) -> List[Tuple[float, int]]:
+        return list(self.events)
+
+
+@dataclass(frozen=True)
+class ScheduleMetrics:
+    total_time: float
+    utilization: float
+    weighted_mean_response: float
+    weighted_mean_completion: float
+    rescale_count: int
+    dropped_jobs: int = 0
+
+    def row(self) -> str:
+        return (f"total={self.total_time:9.1f}s util={self.utilization:6.2%} "
+                f"resp={self.weighted_mean_response:8.2f}s "
+                f"compl={self.weighted_mean_completion:8.2f}s "
+                f"rescales={self.rescale_count}")
+
+
+def compute_metrics(jobs: Sequence[JobState], util: UtilizationLog
+                    ) -> ScheduleMetrics:
+    done = [j for j in jobs if j.end_time is not None]
+    submits = [j.spec.submit_time for j in jobs]
+    t0 = min(submits) if submits else 0.0
+    t1 = max((j.end_time for j in done), default=t0)
+    wsum = sum(j.spec.priority for j in done) or 1.0
+    resp = sum(j.spec.priority * (response_time(j) or 0.0) for j in done) / wsum
+    comp = sum(j.spec.priority * (completion_time(j) or 0.0) for j in done) / wsum
+    return ScheduleMetrics(
+        total_time=t1 - t0,
+        utilization=util.average(t0, t1),
+        weighted_mean_response=resp,
+        weighted_mean_completion=comp,
+        rescale_count=sum(j.rescale_count for j in jobs),
+        dropped_jobs=len(jobs) - len(done),
+    )

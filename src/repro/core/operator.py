@@ -1,0 +1,222 @@
+"""ElasticClusterController — the Kubernetes-operator analog (paper C2).
+
+Owns a pool of JAX devices partitioned into replica slots, runs the *same*
+:class:`ElasticPolicy` as the simulator, but against live
+:class:`ElasticTrainer` jobs: create/shrink/expand actually build meshes,
+compile, and reshard training state.  The control loop is cooperative
+(single-process): each tick advances every running job by ``steps_per_tick``
+train steps — the scheduling observable is identical to running jobs in
+parallel processes, which one CPU core cannot do honestly anyway.
+
+Clocking: the controller's clock advances by each job-step's *modeled* wall
+time when ``step_time_fn`` is given (so T_rescale_gap is meaningful in
+simulated seconds) or by real wall time otherwise.
+
+Fault tolerance (paper §3.2.2): ``inject_failure`` kills a running job; if a
+disk checkpoint exists the job is resubmitted with the restart flag and
+resumes from its last snapshot, otherwise it restarts from scratch.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.checkpoint import DiskCheckpointStore
+from repro.core.cluster import Cluster
+from repro.core.elastic import ElasticTrainer, RescaleTimings, TrainJobConfig
+from repro.core.job import JobSpec, JobState, JobStatus
+from repro.core.metrics import ScheduleMetrics, UtilizationLog, compute_metrics
+from repro.core.policies import Actions, ElasticPolicy, PolicyConfig
+
+
+@dataclass
+class LiveJob:
+    state: JobState
+    factory: Callable[[list], ElasticTrainer]   # devices -> trainer
+    trainer: Optional[ElasticTrainer] = None
+    checkpoint_every: int = 0                    # steps; 0 = off
+    failures: int = 0
+
+
+class _LiveActions(Actions):
+    def __init__(self, op: "ElasticClusterController"):
+        self.op = op
+
+    def create(self, job: JobState, replicas: int) -> bool:
+        op = self.op
+        live = op.live[job.job_id]
+        slots = op.cluster.allocate_slots(job.job_id, replicas)
+        devices = op.cluster.devices_for_slots(slots)
+        try:
+            if live.trainer is None:
+                live.trainer = live.factory(devices)
+                if op.disk_store is not None and op.restart_flags.get(job.job_id):
+                    try:
+                        live.trainer.restore_disk(op.disk_store, job.job_id)
+                    except FileNotFoundError:
+                        pass
+            else:   # queued job that had run before (preempted/restarted)
+                live.trainer.rescale(devices)
+        except Exception:
+            op.cluster.release_slots(job.job_id)
+            raise
+        job.status = JobStatus.RUNNING
+        job.replicas = replicas
+        job.device_ids = tuple(slots)
+        job.last_action = op.now
+        if job.start_time is None:
+            job.start_time = op.now
+        op._record_util()
+        return True
+
+    def expand(self, job: JobState, replicas: int) -> bool:
+        return self._rescale(job, replicas)
+
+    def shrink(self, job: JobState, replicas: int) -> bool:
+        return self._rescale(job, replicas)
+
+    def _rescale(self, job: JobState, replicas: int) -> bool:
+        op = self.op
+        live = op.live[job.job_id]
+        if replicas == job.replicas or live.trainer is None:
+            return True
+        if replicas > job.replicas:
+            extra = replicas - job.replicas
+            if extra > op.cluster.free_slots:
+                return False
+            op.cluster.allocate_slots(job.job_id, extra)
+        else:
+            op.cluster.release_slots(job.job_id, keep=replicas)
+        slots = op.cluster.slots_of(job.job_id)
+        devices = op.cluster.devices_for_slots(slots)
+        timings = live.trainer.rescale(devices)
+        op.rescale_events.append((op.now, job.job_id, job.replicas, replicas,
+                                  timings))
+        op.advance_clock(timings.total)
+        job.replicas = replicas
+        job.device_ids = tuple(slots)
+        job.last_action = op.now
+        job.rescale_count += 1
+        op._record_util()
+        return True
+
+    def enqueue(self, job: JobState) -> None:
+        job.status = JobStatus.QUEUED
+
+
+class ElasticClusterController:
+    def __init__(self, devices: list, *, slots: int, devices_per_slot: int = 1,
+                 policy: PolicyConfig = PolicyConfig(rescale_gap=0.0),
+                 disk_store: Optional[DiskCheckpointStore] = None,
+                 step_time_fn: Optional[Callable[[JobState], float]] = None,
+                 steps_per_tick: int = 1):
+        self.cluster = Cluster(slots, devices, devices_per_slot)
+        self.policy = ElasticPolicy(policy)
+        self.actions = _LiveActions(self)
+        self.live: Dict[str, LiveJob] = {}
+        self.pending: List[JobState] = []
+        self.disk_store = disk_store
+        self.restart_flags: Dict[str, bool] = {}
+        self.step_time_fn = step_time_fn
+        self.steps_per_tick = steps_per_tick
+        self.now = 0.0
+        self._wall0 = time.perf_counter()
+        self.util = UtilizationLog(slots)
+        self.rescale_events: List[tuple] = []
+        self.replica_trace: List[tuple] = []     # (t, job_id, replicas)
+
+    # -- clock ----------------------------------------------------------------
+    def advance_clock(self, dt: float):
+        if self.step_time_fn is not None:
+            self.now += dt
+        else:
+            self.now = time.perf_counter() - self._wall0
+
+    def _record_util(self):
+        self.util.record(self.now, self.cluster.used_slots)
+        for j in self.cluster.jobs.values():
+            self.replica_trace.append((self.now, j.job_id, j.replicas))
+
+    # -- API --------------------------------------------------------------------
+    def submit(self, spec: JobSpec, factory: Callable[[list], ElasticTrainer],
+               checkpoint_every: int = 0, restart: bool = False):
+        state = JobState(spec=spec)
+        self.live[spec.job_id] = LiveJob(state=state, factory=factory,
+                                         checkpoint_every=checkpoint_every)
+        self.restart_flags[spec.job_id] = restart
+        self.pending.append(state)
+        self.pending.sort(key=lambda j: j.spec.submit_time)
+
+    def inject_failure(self, job_id: str):
+        """Kill a running job (node failure).  Resubmission goes through the
+        normal newJob path with the restart flag set (paper §3.2.2)."""
+        job = self.cluster.jobs[job_id]
+        live = self.live[job_id]
+        assert job.status == JobStatus.RUNNING
+        self.cluster.release_slots(job_id)
+        freed = job.replicas
+        job.replicas = 0
+        job.status = JobStatus.PENDING
+        live.trainer = None          # process state lost
+        live.failures += 1
+        self.restart_flags[job_id] = True
+        del self.cluster.jobs[job_id]
+        self._record_util()
+        # freed capacity is redistributed like a completion
+        self.policy.on_job_complete(self.cluster, freed, self.now, self.actions)
+        # resubmit immediately
+        self.pending.append(job)
+        self.pending.sort(key=lambda j: j.spec.submit_time)
+
+    # -- control loop -------------------------------------------------------------
+    def _process_submissions(self):
+        while self.pending and self.pending[0].spec.submit_time <= self.now:
+            job = self.pending.pop(0)
+            if job.job_id not in self.cluster.jobs:
+                self.cluster.add_job(job)
+            self.policy.on_new_job(self.cluster, job, self.now, self.actions)
+
+    def _complete(self, job: JobState):
+        freed = job.replicas
+        self.cluster.release_slots(job.job_id)
+        job.status = JobStatus.COMPLETED
+        job.end_time = self.now
+        job.replicas = 0
+        self._record_util()
+        self.policy.on_job_complete(self.cluster, freed, self.now, self.actions)
+
+    def run(self, max_ticks: int = 1_000_000) -> ScheduleMetrics:
+        ticks = 0
+        while ticks < max_ticks:
+            ticks += 1
+            self._process_submissions()
+            running = [j for j in self.cluster.jobs.values()
+                       if j.status == JobStatus.RUNNING]
+            if not running:
+                if self.pending:
+                    # idle-advance to the next submission
+                    self.advance_clock(
+                        max(0.0, self.pending[0].spec.submit_time - self.now)
+                        if self.step_time_fn else 0.0)
+                    if self.step_time_fn is None:
+                        self.now = max(self.now,
+                                       self.pending[0].spec.submit_time)
+                    continue
+                break
+            for job in running:
+                live = self.live[job.job_id]
+                for _ in range(self.steps_per_tick):
+                    if live.trainer.done:
+                        break
+                    live.trainer.step()
+                    dt = (self.step_time_fn(job) if self.step_time_fn
+                          else 0.0)
+                    self.advance_clock(dt)
+                    ce = live.checkpoint_every
+                    if (self.disk_store is not None and ce
+                            and live.trainer.step_idx % ce == 0):
+                        live.trainer.save_disk(self.disk_store, job.job_id)
+                if live.trainer.done and job.status == JobStatus.RUNNING:
+                    self._complete(job)
+        return compute_metrics(list(self.cluster.jobs.values()), self.util)

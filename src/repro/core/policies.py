@@ -1,0 +1,167 @@
+"""Priority-based elastic scheduling policy — paper Fig. 2 / Fig. 3, faithful.
+
+The policy is pure decision logic over a :class:`Cluster` view; effects go
+through the :class:`Actions` interface, implemented by both the discrete-event
+simulator (virtual clock) and the live operator (real JAX jobs).  This is what
+lets one implementation serve contributions C2 and C3.
+
+Pseudocode reconstruction notes (the published listing is garbled by PDF
+extraction) are in DESIGN.md §6.3; tests/test_scheduler_policies.py pins each
+behavior to a sentence of the paper's prose.
+
+The four evaluated schedulers (paper §4.3) are all this one policy:
+    rigid-min   jobs submitted with min==max==min_replicas
+    rigid-max   jobs submitted with min==max==max_replicas
+    moldable    rescale_gap = +inf (size picked at launch, never rescaled)
+    elastic     the full policy
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Protocol
+
+from repro.core.cluster import Cluster
+from repro.core.job import JobState, JobStatus
+
+
+class Actions(Protocol):
+    """Effect interface; implementations must update cluster accounting
+    synchronously (create/shrink/expand return success)."""
+
+    def create(self, job: JobState, replicas: int) -> bool: ...
+    def expand(self, job: JobState, replicas: int) -> bool: ...
+    def shrink(self, job: JobState, replicas: int) -> bool: ...
+    def enqueue(self, job: JobState) -> None: ...
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    rescale_gap: float = 180.0        # T_rescale_gap (paper §3.2.1)
+    launcher_reserve: int = 0         # paper's `freeSlots - 1` (MPI launcher
+    #                                   pod); 1 reproduces the paper exactly,
+    #                                   0 is the TPU default (DESIGN.md §2d)
+    # Fig. 3's pseudocode redistributes ONLY the slots freed by the completing
+    # job; slots that were already idle are never re-offered, which can strand
+    # capacity forever (a queued job whose min exceeds every later completion
+    # starves on an idle cluster).  True (default) offers freed + idle slots;
+    # False is pseudocode-faithful.  See DESIGN.md §6.3 and the policy tests.
+    redistribute_idle: bool = True
+
+    @classmethod
+    def moldable(cls, **kw) -> "PolicyConfig":
+        kw.setdefault("rescale_gap", math.inf)
+        return cls(**kw)
+
+
+class ElasticPolicy:
+    def __init__(self, cfg: PolicyConfig):
+        self.cfg = cfg
+
+    # -- extension hooks (see core/autoscale.py) ------------------------------
+    def _priority(self, job: JobState, now: float) -> float:
+        """Effective priority; AgingPolicy overrides (paper §3.2.2 'aging')."""
+        return float(job.spec.priority)
+
+    def _should_expand(self, job: JobState, new_replicas: int, now: float
+                       ) -> bool:
+        """CostBenefitPolicy overrides (paper §6: expansion must pay for its
+        rescale overhead)."""
+        return True
+
+    def _should_shrink(self, job: JobState, new_replicas: int, now: float
+                       ) -> bool:
+        """CostBenefitPolicy overrides (paper §6: a nearly-finished job should
+        run to completion instead of being shrunk)."""
+        return True
+
+    # -- helpers ------------------------------------------------------------
+    def _sorted_desc(self, jobs, now: float):
+        return sorted(jobs, key=lambda j: (-self._priority(j, now),
+                                           j.spec.submit_time, j.spec.job_id))
+
+    def _avail(self, cluster: Cluster) -> int:
+        return cluster.free_slots - self.cfg.launcher_reserve
+
+    def _gap_ok(self, job: JobState, now: float) -> bool:
+        return now - job.last_action >= self.cfg.rescale_gap
+
+    # -- Figure 2: a new job is submitted ------------------------------------
+    def on_new_job(self, cluster: Cluster, job: JobState, now: float,
+                   act: Actions) -> None:
+        spec = job.spec
+        free = self._avail(cluster)
+        replicas = spec.feasible(min(free, spec.max_replicas))
+        if replicas >= spec.min_replicas:
+            # start immediately; never shrink anyone if min fits (paper §3.2.1:
+            # "run the higher priority job at its minimum replicas
+            #  configuration to avoid a shrink call")
+            act.create(job, replicas)
+            return
+
+        # dry pass: could shrinking strictly-lower/equal-priority running jobs
+        # (outside their cool-down) free enough for min_replicas?
+        running_desc = self._sorted_desc(cluster.running_jobs(), now)
+        num_to_free = spec.min_replicas - free
+        for j in reversed(running_desc):              # lowest priority first
+            if num_to_free <= 0:
+                break
+            if self._priority(j, now) > self._priority(job, now):
+                break                                 # priority guard
+            if not self._gap_ok(j, now):
+                continue
+            num_to_free -= max(0, j.replicas - j.spec.min_replicas)
+        if num_to_free > 0:
+            act.enqueue(job)
+            return
+
+        # real pass: shrink toward the NEW job's max configuration
+        min_to_free = spec.min_replicas - free
+        max_to_free = spec.max_replicas - free
+        for j in reversed(running_desc):
+            if max_to_free <= 0:
+                break
+            if self._priority(j, now) > self._priority(job, now):
+                break
+            if not self._gap_ok(j, now):
+                continue
+            if j.replicas > j.spec.min_replicas:
+                target = j.spec.feasible(
+                    max(j.spec.min_replicas, j.replicas - max_to_free))
+                if target >= j.replicas or not self._should_shrink(j, target, now):
+                    continue
+                freed = j.replicas - target
+                if act.shrink(j, target):
+                    min_to_free -= freed
+                    max_to_free -= freed
+        if min_to_free > 0:
+            act.enqueue(job)    # raced a cool-down; shouldn't normally happen
+            return
+        free = self._avail(cluster)
+        act.create(job, spec.feasible(min(free, spec.max_replicas)))
+
+    # -- Figure 3: a job completed -------------------------------------------
+    def on_job_complete(self, cluster: Cluster, freed_slots: int, now: float,
+                        act: Actions) -> None:
+        """Redistribute the freed slots (paper: numWorkers = freeWorkers(job))
+        over running+queued jobs, highest priority first."""
+        num = cluster.free_slots if self.cfg.redistribute_idle else freed_slots
+        for j in self._sorted_desc(cluster.all_schedulable_jobs(), now):
+            if num <= 0:
+                break
+            if not self._gap_ok(j, now):
+                continue
+            if j.replicas < j.spec.max_replicas:
+                add = min(num, j.spec.max_replicas - j.replicas)
+                new_r = j.spec.feasible(j.replicas + add)
+                add = new_r - j.replicas
+                if add > 0 and new_r >= j.spec.min_replicas:
+                    if (j.status == JobStatus.RUNNING
+                            and not self._should_expand(j, new_r, now)):
+                        continue
+                    ok = (act.expand(j, new_r)
+                          if j.status == JobStatus.RUNNING
+                          else act.create(j, new_r))
+                    if ok:
+                        num -= add
+        # any remainder simply stays free

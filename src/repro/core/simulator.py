@@ -1,0 +1,246 @@
+"""Discrete-event scheduler simulator — paper contribution C3.
+
+Reproduces §4.3.1: Fig. 7 (submission-gap sweep), Fig. 8 (T_rescale_gap
+sweep), and the simulation columns of Table 1.  Job runtime vs. replicas and
+rescale overheads come from the piecewise models in ``perf_model`` (the paper
+interpolates measured Jacobi2D points; we synthesize them — DESIGN.md §6.4).
+
+Progress accounting: a running job accrues work at ``1/time_per_step(r)``
+steps/s except inside its rescale-overhead window.  Completion events carry a
+version stamp so a rescale invalidates the stale completion.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cluster import Cluster
+from repro.core.events import EventQueue
+from repro.core.job import JobSpec, JobState, JobStatus
+from repro.core.metrics import ScheduleMetrics, UtilizationLog, compute_metrics
+from repro.core.perf_model import (JACOBI_SIZES, JacobiModel,
+                                   PiecewiseScalingModel, RescaleModel)
+from repro.core.policies import ElasticPolicy, PolicyConfig
+
+
+@dataclass
+class SimWorkload:
+    """Perf description of one simulated job."""
+    scaling: object                 # .time_per_step(replicas) -> s
+    total_work: float               # steps
+    data_bytes: float
+    rescale: RescaleModel = field(default_factory=RescaleModel)
+
+
+class _SimActions:
+    """Actions implementation mutating simulator state (virtual clock)."""
+
+    def __init__(self, sim: "Simulator"):
+        self.sim = sim
+
+    # paper: rigid emulation also passes through here; policy never calls
+    # shrink/expand on rigid jobs because min == max.
+    def create(self, job: JobState, replicas: int) -> bool:
+        sim = self.sim
+        assert replicas <= sim.cluster.free_slots, "over-allocation"
+        job.status = JobStatus.RUNNING
+        job.replicas = replicas
+        job.last_action = sim.now
+        if job.start_time is None:
+            job.start_time = sim.now
+        if job.preempt_count and job.work_remaining < sim.workloads[
+                job.job_id].total_work:
+            # resuming a preempted job: restart + restore-from-disk
+            wl = sim.workloads[job.job_id]
+            job.overhead_until = sim.now + wl.rescale.resume_cost(
+                replicas, wl.data_bytes)
+        job.last_progress_time = sim.now
+        sim._schedule_completion(job)
+        sim._record_util()
+        return True
+
+    def expand(self, job: JobState, replicas: int) -> bool:
+        return self._rescale(job, replicas)
+
+    def shrink(self, job: JobState, replicas: int) -> bool:
+        return self._rescale(job, replicas)
+
+    def _rescale(self, job: JobState, replicas: int) -> bool:
+        sim = self.sim
+        if replicas == job.replicas:
+            return True
+        delta = replicas - job.replicas
+        if delta > sim.cluster.free_slots:
+            return False
+        sim._sync_progress(job)
+        wl = sim.workloads[job.job_id]
+        overhead = wl.rescale.total(job.replicas, replicas, wl.data_bytes)
+        job.overhead_until = max(sim.now, job.overhead_until) + overhead
+        job.replicas = replicas
+        job.last_action = sim.now
+        job.rescale_count += 1
+        sim.total_overhead += overhead
+        sim._schedule_completion(job)
+        sim._record_util()
+        return True
+
+    def enqueue(self, job: JobState) -> None:
+        job.status = JobStatus.QUEUED
+
+    def preempt(self, job: JobState) -> bool:
+        """Checkpoint-to-disk preemption (core/autoscale.PreemptingPolicy)."""
+        sim = self.sim
+        sim._sync_progress(job)
+        wl = sim.workloads[job.job_id]
+        # the victim pays the disk checkpoint before its slots free up
+        sim.now += wl.rescale.preempt_cost(job.replicas, wl.data_bytes)
+        job.status = JobStatus.QUEUED
+        job.replicas = 0
+        job.version += 1            # invalidate its completion event
+        job.preempt_count += 1
+        job.last_action = sim.now
+        sim._record_util()
+        return True
+
+
+class Simulator:
+    def __init__(self, total_slots: int, policy_cfg: PolicyConfig):
+        self.cluster = Cluster(total_slots)
+        self.policy = ElasticPolicy(policy_cfg)
+        self.queue = EventQueue()
+        self.actions = _SimActions(self)
+        self.workloads: Dict[str, SimWorkload] = {}
+        self.util = UtilizationLog(total_slots)
+        self.now = 0.0
+        self.total_overhead = 0.0
+
+    # -- bookkeeping ---------------------------------------------------------
+    def _record_util(self):
+        self.util.record(self.now, self.cluster.used_slots)
+
+    def _rate(self, job: JobState) -> float:
+        wl = self.workloads[job.job_id]
+        return 1.0 / wl.scaling.time_per_step(job.replicas)
+
+    def _sync_progress(self, job: JobState):
+        if job.status != JobStatus.RUNNING:
+            return
+        start = max(job.last_progress_time, min(job.overhead_until, self.now))
+        if self.now > start:
+            job.work_remaining -= (self.now - start) * self._rate(job)
+        job.last_progress_time = self.now
+
+    def _schedule_completion(self, job: JobState):
+        job.version += 1
+        begin = max(self.now, job.overhead_until)
+        t_done = begin + job.work_remaining * \
+            self.workloads[job.job_id].scaling.time_per_step(job.replicas)
+        self.queue.push(t_done, "complete", (job.job_id, job.version))
+
+    # -- API -----------------------------------------------------------------
+    def submit(self, spec: JobSpec, workload: SimWorkload):
+        state = JobState(spec=spec, work_remaining=workload.total_work)
+        self.workloads[spec.job_id] = workload
+        self.queue.push(spec.submit_time, "submit", state)
+
+    def run(self) -> ScheduleMetrics:
+        while len(self.queue):
+            ev = self.queue.pop()
+            self.now = max(self.now, ev.time)
+            if ev.kind == "submit":
+                job: JobState = ev.payload
+                self.cluster.add_job(job)
+                # policies may consult work_remaining (cost-benefit): sync all
+                for j in self.cluster.running_jobs():
+                    self._sync_progress(j)
+                self.policy.on_new_job(self.cluster, job, self.now,
+                                       self.actions)
+            elif ev.kind == "complete":
+                job_id, version = ev.payload
+                job = self.cluster.jobs[job_id]
+                if job.version != version or job.status != JobStatus.RUNNING:
+                    continue       # stale event (job was rescaled since)
+                self._sync_progress(job)
+                if job.work_remaining > 1e-6:   # overhead pushed completion
+                    self._schedule_completion(job)
+                    continue
+                freed = job.replicas
+                job.status = JobStatus.COMPLETED
+                job.end_time = self.now
+                job.replicas = 0
+                self._record_util()
+                for j in self.cluster.running_jobs():
+                    self._sync_progress(j)
+                self.policy.on_job_complete(self.cluster, freed, self.now,
+                                            self.actions)
+        return compute_metrics(list(self.cluster.jobs.values()), self.util)
+
+
+# ---------------------------------------------------------------------------
+# Workload generation (paper §4.3.1)
+# ---------------------------------------------------------------------------
+
+REPLICA_GRID = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def jacobi_workload(size: str) -> SimWorkload:
+    d = JACOBI_SIZES[size]
+    model = JacobiModel(d["grid_n"], d["timesteps"])
+    return SimWorkload(
+        scaling=model.scaling_model(REPLICA_GRID),
+        total_work=float(d["timesteps"]),
+        data_bytes=model.data_bytes,
+    )
+
+
+def make_jacobi_jobs(seed: int, n_jobs: int = 16, submission_gap: float = 90.0
+                     ) -> List[JobSpec]:
+    """16 jobs drawn from the 4 sizes with priorities U{1..5} (paper)."""
+    rng = np.random.default_rng(seed)
+    sizes = list(JACOBI_SIZES)
+    specs = []
+    for i in range(n_jobs):
+        size = sizes[int(rng.integers(len(sizes)))]
+        d = JACOBI_SIZES[size]
+        specs.append(JobSpec(
+            job_id=f"job{i:03d}-{size}",
+            priority=int(rng.integers(1, 6)),
+            min_replicas=d["min_replicas"],
+            max_replicas=d["max_replicas"],
+            submit_time=i * submission_gap,
+            workload=size,
+        ))
+    return specs
+
+
+def run_variant(variant: str, specs: Sequence[JobSpec], *, total_slots: int,
+                rescale_gap: float = 180.0, launcher_reserve: int = 0,
+                workload_fn: Callable[[JobSpec], SimWorkload] = None
+                ) -> ScheduleMetrics:
+    """Run one scheduling policy variant (paper §4.3's four schedulers)."""
+    workload_fn = workload_fn or (lambda s: jacobi_workload(s.workload))
+    if variant == "rigid_min":
+        specs = [s.rigid(s.min_replicas) for s in specs]
+        pcfg = PolicyConfig(rescale_gap=rescale_gap,
+                            launcher_reserve=launcher_reserve)
+    elif variant == "rigid_max":
+        specs = [s.rigid(s.max_replicas) for s in specs]
+        pcfg = PolicyConfig(rescale_gap=rescale_gap,
+                            launcher_reserve=launcher_reserve)
+    elif variant == "moldable":
+        pcfg = PolicyConfig.moldable(launcher_reserve=launcher_reserve)
+    elif variant == "elastic":
+        pcfg = PolicyConfig(rescale_gap=rescale_gap,
+                            launcher_reserve=launcher_reserve)
+    else:
+        raise ValueError(variant)
+    sim = Simulator(total_slots, pcfg)
+    for s in specs:
+        sim.submit(s, workload_fn(s))
+    return sim.run()
+
+
+VARIANTS = ("rigid_min", "rigid_max", "moldable", "elastic")

@@ -1,0 +1,3 @@
+from repro.data.pipeline import TokenStream, EncDecStream, make_stream
+
+__all__ = ["TokenStream", "EncDecStream", "make_stream"]

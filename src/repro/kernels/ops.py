@@ -1,0 +1,116 @@
+"""Jitted wrappers around the Pallas kernels, with a global enable switch.
+
+On this CPU container, kernels run in ``interpret=True`` mode for validation;
+on a real TPU backend they compile natively.  Model code consults
+``pallas_enabled()`` — default off on CPU so the dry-run lowers the pure-XLA
+path (a TPU Pallas kernel cannot lower on the CPU backend; see DESIGN.md §5).
+
+The flash-attention wrapper attaches a custom VJP whose backward pass
+recomputes attention via the memory-efficient reference path (flash-style
+recompute — nothing quadratic is saved between fwd and bwd).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd_scan import ssd_chunked_pallas
+
+_STATE = {
+    "enabled": os.environ.get("REPRO_USE_PALLAS", "0") == "1",
+    "interpret": jax.default_backend() != "tpu",
+}
+
+
+def pallas_enabled() -> bool:
+    return _STATE["enabled"]
+
+
+def set_pallas(enabled: bool, *, interpret: bool = None):
+    _STATE["enabled"] = enabled
+    if interpret is not None:
+        _STATE["interpret"] = interpret
+
+
+def _interp(override):
+    return _STATE["interpret"] if override is None else override
+
+
+# ---------------------------------------------------------------------------
+# flash attention (fwd kernel + recompute bwd)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal, scale, interpret):
+    return flash_attention_fwd(q, k, v, causal=causal, scale=scale,
+                               interpret=interpret)
+
+
+def _flash_fwd(q, k, v, causal, scale, interpret):
+    out = flash_attention_fwd(q, k, v, causal=causal, scale=scale,
+                              interpret=interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, scale, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, scale=scale), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float = None,
+                    interpret: bool = None):
+    scale = q.shape[-1] ** -0.5 if scale is None else scale
+    return _flash(q, k, v, causal, scale, _interp(interpret))
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (fwd kernel + recompute bwd via the jnp chunked path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd(x, dt, a_log, b, c, chunk, interpret):
+    return ssd_chunked_pallas(x, dt, a_log, b, c, chunk=chunk,
+                              interpret=interpret)
+
+
+def _ssd_fwd(x, dt, a_log, b, c, chunk, interpret):
+    out = ssd_chunked_pallas(x, dt, a_log, b, c, chunk=chunk,
+                             interpret=interpret)
+    return out, (x, dt, a_log, b, c)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    x, dt, a_log, b, c = res
+    from repro.models.ssm import ssd_chunked
+    _, vjp = jax.vjp(
+        lambda x_, dt_, a_, b_, c_: ssd_chunked(x_, dt_, a_, b_, c_,
+                                                chunk=chunk),
+        x, dt, a_log, b, c)
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd(x, dt, a_log, b, c, *, chunk: int = 128, interpret: bool = None):
+    return _ssd(x, dt, a_log, b, c, chunk, _interp(interpret))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, *, eps: float = 1e-5, interpret: bool = None):
+    return rmsnorm_pallas(x, w, eps=eps, interpret=_interp(interpret))

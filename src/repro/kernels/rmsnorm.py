@@ -1,0 +1,42 @@
+"""Fused RMSNorm row kernel (Pallas TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                    # (rows, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, w, *, eps: float = 1e-5, block_rows: int = 256,
+                   interpret: bool = False):
+    """x: (..., D); w: (D,)."""
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    block_rows = min(block_rows, R)
+    pad = (-R) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    n = xf.shape[0] // block_rows
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, w)
+    if pad:
+        out = out[:R]
+    return out.reshape(orig_shape)

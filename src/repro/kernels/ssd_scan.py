@@ -1,0 +1,95 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (arXiv 2405.21060 §6): the sequence is
+processed in chunks of Q tokens.  Within a chunk the dual "attention" form is
+three MXU matmuls ((Q,N)x(N,Q), (Q,Q)x(Q,P), (Q,N)x(N,P)); across chunks the
+(P,N) state is carried in VMEM scratch through the sequentially-iterated chunk
+grid dimension.  Cumulative decays use a lower-triangular ones matmul rather
+than cumsum so everything maps onto the MXU.
+
+Grid: (batch, head, chunk) with chunk innermost ("arbitrary" = sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_log_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int):
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    Q = chunk
+    x = x_ref[0, :, 0, :].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)[:, None]    # (Q, 1)
+    b = b_ref[0, :, 0, :].astype(jnp.float32)            # (Q, N)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)            # (Q, N)
+    A = -jnp.exp(a_log_ref[0].astype(jnp.float32))       # scalar
+
+    dA = dt * A                                          # (Q, 1)
+    # inclusive cumulative sum via lower-triangular ones matmul (MXU-friendly)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tril = (rows >= cols).astype(jnp.float32)
+    cum = jax.lax.dot_general(tril, dA, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q,1)
+
+    # --- intra-chunk quadratic term ---
+    decay = jnp.where(rows >= cols, jnp.exp(cum - cum.T), 0.0)     # (Q,Q)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q,Q)
+    scores = cb * decay * dt.T                                     # dt_s on cols
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q,P)
+
+    # --- inter-chunk contribution: C_t . h_prev, scaled by exp(cum_t) ---
+    h_prev = h_ref[...]                                            # (P,N)
+    y_inter = jax.lax.dot_general(c, h_prev, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (Q,P)
+    y = y + jnp.exp(cum) * y_inter
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # --- state update: h = exp(cum_Q) h_prev + X^T (tail*dt*B) ---
+    total = cum[Q - 1, 0]
+    tail = jnp.exp(total - cum)                                    # (Q,1)
+    hb = jax.lax.dot_general(x, b * (tail * dt), (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (P,N)
+    h_ref[...] = jnp.exp(total) * h_prev + hb
+
+
+def ssd_chunked_pallas(x, dt, a_log, b, c, *, chunk: int = 128,
+                       interpret: bool = False):
+    """x: (B,L,H,P); dt: (B,L,H); a_log: (H,); b,c: (B,L,G,N) -> (B,L,H,P)."""
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, h, n: (h,)),
+            pl.BlockSpec((1, Q, 1, P), lambda bi, h, n: (bi, n, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bi, h, n: (bi, n, h)),
+            pl.BlockSpec((1, Q, 1, N), lambda bi, h, n: (bi, n, h // rep, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda bi, h, n: (bi, n, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda bi, h, n: (bi, n, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_log, x, dt, b, c)

@@ -1,0 +1,215 @@
+"""Cell definitions: (architecture x input shape) -> lowerable step functions
+with shardings, plus per-arch sharding-rule selection and MODEL_FLOPS.
+
+This module is the single source of truth used by the dry-run, the roofline
+benchmarks, and the §Perf hillclimbing (which swaps `rules` / knobs here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, shape_applicable
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, \
+    count_active_params, count_params
+from repro.models import model as M
+from repro.optim import AdamWConfig, abstract_opt_state, adamw_update, \
+    opt_logical_axes, warmup_cosine
+from repro.sharding import AxisRules, RULE_SETS, axis_rules, \
+    make_param_shardings
+
+# ---------------------------------------------------------------------------
+# Per-arch sharding rules (baseline; §Perf iterates these)
+# ---------------------------------------------------------------------------
+
+# FSDP for archs whose optimizer state cannot replicate over 'data'
+_FSDP_ARCHS = {"deepseek-v2-236b", "jamba-v0.1-52b", "chameleon-34b",
+               "yi-9b"}
+# sequence parallelism applies to all archs: mixer-internal constraints force
+# seq gathered / features sharded (Megatron-style SP boundaries)
+_NO_SP_ARCHS = set()
+
+# per-arch logical->mesh overrides applied on top of the rule set
+ARCH_OVERRIDES: Dict[str, Dict[str, object]] = {
+    # granite's 40 experts pad to 48 inside the MoE dispatch (moe.py) and
+    # shard over 'model' like every other MoE arch
+    # >30B params cannot replicate over 'data' even when serving: keep the
+    # FSDP embed sharding in decode/prefill rules too
+    "deepseek-v2-236b": {"embed": ("pod", "data")},
+    "jamba-v0.1-52b": {"embed": ("pod", "data")},
+    "chameleon-34b": {"embed": ("pod", "data")},
+}
+
+
+def train_rules_name(arch: str) -> str:
+    fsdp = arch in _FSDP_ARCHS
+    sp = arch not in _NO_SP_ARCHS
+    return {
+        (False, False): "tp",
+        (False, True): "tp_sp",
+        (True, False): "tp_fsdp",
+        (True, True): "tp_fsdp_sp",
+    }[(fsdp, sp)]
+
+
+def decode_rules_name(arch: str, shape: ShapeConfig) -> str:
+    return "decode_long" if shape.name == "long_500k" else "decode"
+
+
+def make_rules(arch: str, mesh: Mesh, name: str,
+               extra_overrides: Optional[dict] = None) -> AxisRules:
+    rules = RULE_SETS[name]()
+    rules.update(ARCH_OVERRIDES.get(arch, {}))
+    rules.update(extra_overrides or {})
+    return AxisRules(mesh=mesh, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, adamw: AdamWConfig = AdamWConfig(),
+                     total_steps: int = 10_000) -> Callable:
+    def train_step(params, opt_state, batch, step):
+        def lf(p):
+            return M.loss_fn(cfg, p, batch)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        lr = warmup_cosine(step, peak_lr=3e-4, warmup_steps=500,
+                           total_steps=total_steps)
+        params, opt_state, om = adamw_update(adamw, grads, opt_state, params,
+                                             lr)
+        return params, opt_state, dict(metrics, **om)
+    return train_step
+
+
+def build_prefill(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    def decode(params, cache, tokens, pos):
+        logits, new_cache = M.decode_step(cfg, params, cache, tokens, pos)
+        return logits, new_cache
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Cell:
+    arch: str
+    cfg: ModelConfig
+    shape: ShapeConfig
+    rules: AxisRules
+    fn: Callable
+    abstract_args: tuple
+    in_shardings: tuple
+    donate: Tuple[int, ...]
+    model_flops: float          # MODEL_FLOPS for one step of this cell
+    scan_trips: Dict[str, int]  # while-body name fragment -> trip count
+
+    def lower(self):
+        with axis_rules(self.rules):
+            jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                             donate_argnums=self.donate)
+            return jitted.lower(*self.abstract_args)
+
+
+def _model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    # 6*N_active*D (train) / 2*N_active*D (inference); for enc-dec, D counts
+    # decoder tokens only (each token passes through ~half the params, so
+    # counting both sides with N_total would overstate MODEL_FLOPS).
+    n_active = count_active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch      # one token per sequence
+
+
+def _batch_sharding(rules: AxisRules, spec_tree):
+    def sh(s):
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(rules.mesh, rules.spec_for(axes, tuple(s.shape)))
+    return jax.tree.map(sh, spec_tree)
+
+
+def make_cell(arch: str, shape_name: str, mesh: Mesh, *,
+              rules_name: Optional[str] = None,
+              rule_overrides: Optional[dict] = None,
+              cfg_override: Optional[ModelConfig] = None) -> Cell:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name}: {why}")
+
+    prefix_n, scan_n = cfg.scan_layers()
+    period = cfg.layer_period()
+    trips = {"while": max(1, scan_n // period)}
+
+    if shape.kind == "train":
+        rname = rules_name or train_rules_name(arch)
+        rules = make_rules(arch, mesh, rname, rule_overrides)
+        axes = M.logical_axes(cfg)
+        abstract_p = M.abstract_params(cfg)
+        abstract_o = abstract_opt_state(abstract_p)
+        p_sh = make_param_shardings(rules, axes, abstract_p)
+        o_sh = make_param_shardings(rules, opt_logical_axes(axes), abstract_o)
+        batch_spec = M.input_specs(cfg, shape)
+        b_sh = _batch_sharding(rules, batch_spec)
+        scalar_sh = NamedSharding(mesh, P())
+        fn = build_train_step(cfg)
+        return Cell(arch, cfg, shape, rules, fn,
+                    (abstract_p, abstract_o, batch_spec,
+                     jax.ShapeDtypeStruct((), jnp.int32)),
+                    (p_sh, o_sh, b_sh, scalar_sh), (0, 1),
+                    _model_flops(cfg, shape), trips)
+
+    rname = rules_name or decode_rules_name(arch, shape)
+    rules = make_rules(arch, mesh, rname, rule_overrides)
+    axes = M.logical_axes(cfg)
+    abstract_p = M.abstract_params(cfg)
+    p_sh = make_param_shardings(rules, axes, abstract_p)
+
+    if shape.kind == "prefill":
+        batch_spec = M.input_specs(cfg, shape)
+        b_sh = _batch_sharding(rules, batch_spec)
+        fn = build_prefill(cfg)
+        return Cell(arch, cfg, shape, rules, fn,
+                    (abstract_p, batch_spec), (p_sh, b_sh), (),
+                    _model_flops(cfg, shape), trips)
+
+    # decode
+    spec = M.input_specs(cfg, shape)
+    c_axes = M.cache_axes(cfg)
+    c_sh = make_param_shardings(rules, c_axes, spec["cache"])
+    tok_sh = NamedSharding(
+        mesh, rules.spec_for(("batch", None), tuple(spec["tokens"].shape)))
+    scalar_sh = NamedSharding(mesh, P())
+    fn = build_decode_step(cfg)
+    return Cell(arch, cfg, shape, rules, fn,
+                (abstract_p, spec["cache"], spec["tokens"], spec["pos"]),
+                (p_sh, c_sh, tok_sh, scalar_sh), (1,),
+                _model_flops(cfg, shape), trips)
+
+
+def all_cells() -> list:
+    """All runnable (arch x shape) pairs with skip annotations."""
+    out = []
+    from repro.configs import ALL_ARCHS
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for sname in SHAPES:
+            ok, why = shape_applicable(cfg, SHAPES[sname])
+            out.append((arch, sname, ok, why))
+    return out

@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (v5e); multi-pod extends data parallelism
+    across 2 pods (512 chips) via the leading 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def chips_in(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

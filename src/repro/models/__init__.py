@@ -1,0 +1,9 @@
+from repro.models import model
+from repro.models.model import (abstract_params, decode_step, forward_hidden,
+                                init_params, input_specs, logical_axes,
+                                loss_fn, make_cache, pad_cache, param_count,
+                                prefill)
+
+__all__ = ["model", "loss_fn", "forward_hidden", "prefill", "decode_step",
+           "make_cache", "pad_cache", "input_specs", "init_params",
+           "abstract_params", "logical_axes", "param_count"]

@@ -1,0 +1,106 @@
+"""Shared layer primitives (pure functions, fp32-stable where it matters)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FF_GELU, FF_RELU2, FF_SWIGLU
+from repro.sharding import shard_constraint
+
+
+def rmsnorm(x, weight, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def gated_rmsnorm(x, gate, weight, eps: float):
+    """Mamba-2 output norm: rmsnorm(x * silu(gate))."""
+    return rmsnorm(x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype),
+                   weight, eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    # broadcast over the heads axis: (..., S, 1, hd/2)
+    angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFNs
+# ---------------------------------------------------------------------------
+
+def apply_ffn(p: dict, x, kind: str):
+    if kind == FF_SWIGLU:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif kind == FF_GELU:
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    elif kind == FF_RELU2:
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = jnp.square(jax.nn.relu(u))
+    else:
+        raise ValueError(kind)
+    h = shard_constraint(h, "batch", None, "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(hidden, w_head, labels, *, chunk: int = 1024,
+                         valid_vocab: int = 0):
+    """Cross-entropy over a large vocab without materializing (B,S,V).
+
+    hidden: (B,S,D); w_head: (D,Vp); labels: (B,S) int32, -1 = masked.
+    Scans over sequence chunks with a rematerialized body, so only ONE
+    chunk's logits are ever live (fwd AND bwd).  ``valid_vocab`` masks
+    padded vocab columns (w_head may be padded for shardability).
+    Returns (total_loss_sum, total_weight).
+    """
+    B, S, D = hidden.shape
+    Vp = w_head.shape[-1]
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    hid = hidden.reshape(B, n, chunk, D).swapaxes(0, 1)      # (n,B,c,D)
+    lab = labels.reshape(B, n, chunk).swapaxes(0, 1)         # (n,B,c)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, l = xs
+        logits = jnp.einsum("bcd,dv->bcv", h, w_head).astype(jnp.float32)
+        logits = shard_constraint(logits, "batch", None, "vocab")
+        if valid_vocab and valid_vocab < Vp:
+            pad_mask = jnp.arange(Vp) < valid_vocab
+            logits = jnp.where(pad_mask[None, None, :], logits,
+                               jnp.finfo(jnp.float32).min)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        mask = (l >= 0).astype(jnp.float32)
+        loss = jnp.sum((lse - tgt) * mask)
+        return (carry[0] + loss, carry[1] + jnp.sum(mask)), None
+
+    (loss_sum, weight), _ = jax.lax.scan(body, (0.0, 0.0), (hid, lab))
+    return loss_sum, weight

@@ -1,0 +1,250 @@
+"""Parameter specs: one tree describing shape / logical axes / init for every
+parameter of every architecture.  ``init_params`` and ``logical_axes`` and the
+dry-run's ShapeDtypeStructs all derive from this tree, so they can never drift.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ATTN, FF_GELU, FF_MOE, FF_NONE, FF_RELU2,
+                                FF_SWIGLU, MLA, SSM, ModelConfig)
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == len(shape)
+    init: str = "normal"              # normal | zeros | ones | ssm_a | dt_bias | uniform_conv
+    fan_in: int = 0                   # for normal init scale (0 => shape[0])
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+# ---------------------------------------------------------------------------
+# Spec builders per component
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "qk")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "qk")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "qk")),
+        "wo": ParamSpec((h, hd, d), ("heads", "qk", "embed"), fan_in=h * hd),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), (None,), init="ones")
+        s["k_norm"] = ParamSpec((hd,), (None,), init="ones")
+    return s
+
+
+def _mla_specs(cfg: ModelConfig) -> dict:
+    a, d, h = cfg.mla, cfg.d_model, cfg.num_heads
+    qk_dim = a.qk_nope_head_dim + a.qk_rope_head_dim
+    s = {}
+    if a.q_lora_rank:
+        s["wq_a"] = ParamSpec((d, a.q_lora_rank), ("embed", "lora"))
+        s["q_norm"] = ParamSpec((a.q_lora_rank,), (None,), init="ones")
+        s["wq_b"] = ParamSpec((a.q_lora_rank, h, qk_dim), ("lora", "heads", "qk"),
+                              fan_in=a.q_lora_rank)
+    else:
+        s["wq"] = ParamSpec((d, h, qk_dim), ("embed", "heads", "qk"))
+    # kv down-projection also produces the shared rope key
+    s["wkv_a"] = ParamSpec((d, a.kv_lora_rank + a.qk_rope_head_dim),
+                           ("embed", "lora"))
+    s["kv_norm"] = ParamSpec((a.kv_lora_rank,), (None,), init="ones")
+    s["wkv_b"] = ParamSpec((a.kv_lora_rank, h, a.qk_nope_head_dim + a.v_head_dim),
+                           ("lora", "heads", "qk"), fan_in=a.kv_lora_rank)
+    s["wo"] = ParamSpec((h, a.v_head_dim, d), ("heads", "qk", "embed"),
+                        fan_in=h * a.v_head_dim)
+    return s
+
+
+def _ssm_specs(cfg: ModelConfig) -> dict:
+    ss, d = cfg.ssm, cfg.d_model
+    d_inner = ss.expand * d
+    nh = ss.num_heads or d_inner // ss.head_dim
+    gn = ss.num_groups * ss.d_state
+    conv_dim = d_inner + 2 * gn
+    return {
+        # in_proj -> [z (d_inner), x (d_inner), B (gn), C (gn), dt (nh)]
+        "in_proj": ParamSpec((d, 2 * d_inner + 2 * gn + nh), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((ss.conv_width, conv_dim), (None, "ssm_inner"),
+                            init="uniform_conv", fan_in=ss.conv_width),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((nh,), ("ssm_heads",), init="ssm_a"),
+        "d_skip": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="dt_bias"),
+        "out_norm": ParamSpec((d_inner,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("ssm_inner", "embed"), fan_in=d_inner),
+    }
+
+
+def _ffn_specs(cfg: ModelConfig, kind: str, d_ff: int) -> dict:
+    d = cfg.d_model
+    if kind == FF_SWIGLU:
+        return {
+            "w_gate": ParamSpec((d, d_ff), ("embed", "ffn")),
+            "w_up": ParamSpec((d, d_ff), ("embed", "ffn")),
+            "w_down": ParamSpec((d_ff, d), ("ffn", "embed"), fan_in=d_ff),
+        }
+    if kind in (FF_GELU, FF_RELU2):
+        return {
+            "w_up": ParamSpec((d, d_ff), ("embed", "ffn")),
+            "w_down": ParamSpec((d_ff, d), ("ffn", "embed"), fan_in=d_ff),
+        }
+    raise ValueError(kind)
+
+
+def _moe_specs(cfg: ModelConfig) -> dict:
+    m, d = cfg.moe, cfg.d_model
+    e, f = m.num_experts, m.d_ff_expert
+    s = {"router": ParamSpec((d, e), ("embed", "experts"))}
+    if m.ff_kind == FF_SWIGLU:
+        s["w_gate"] = ParamSpec((e, d, f), ("experts", "embed", "expert_ffn"), fan_in=d)
+        s["w_up"] = ParamSpec((e, d, f), ("experts", "embed", "expert_ffn"), fan_in=d)
+        s["w_down"] = ParamSpec((e, f, d), ("experts", "expert_ffn", "embed"), fan_in=f)
+    else:
+        s["w_up"] = ParamSpec((e, d, f), ("experts", "embed", "expert_ffn"), fan_in=d)
+        s["w_down"] = ParamSpec((e, f, d), ("experts", "expert_ffn", "embed"), fan_in=f)
+    if m.num_shared_experts:
+        s["shared"] = _ffn_specs(cfg, m.ff_kind, m.num_shared_experts * m.d_ff_expert)
+    return s
+
+
+def _layer_specs(cfg: ModelConfig, i: int, *, cross_attn: bool = False) -> dict:
+    d = cfg.d_model
+    mixer = cfg.mixer_at(i)
+    s = {"mixer_norm": ParamSpec((d,), ("embed",), init="ones")}
+    if mixer == ATTN:
+        s["mixer"] = _attn_specs(cfg)
+    elif mixer == MLA:
+        s["mixer"] = _mla_specs(cfg)
+    elif mixer == SSM:
+        s["mixer"] = _ssm_specs(cfg)
+    else:
+        raise ValueError(mixer)
+    if cross_attn:
+        s["cross_norm"] = ParamSpec((d,), ("embed",), init="ones")
+        s["cross"] = _attn_specs(cfg)
+    ff = cfg.ff_at(i)
+    if ff != FF_NONE:
+        s["ff_norm"] = ParamSpec((d,), ("embed",), init="ones")
+        s["ff"] = _moe_specs(cfg) if ff == FF_MOE else _ffn_specs(cfg, ff, cfg.d_ff)
+    return s
+
+
+def _stack(tree, n: int):
+    """Prefix every leaf spec with a scanned 'layers' axis of length n."""
+    return jax.tree.map(
+        lambda p: ParamSpec((n,) + p.shape, ("layers",) + p.axes, p.init,
+                            p.fan_in or p.shape[0]),
+        tree, is_leaf=is_spec)
+
+
+def _decoder_specs(cfg: ModelConfig, *, cross_attn: bool) -> dict:
+    prefix_n, scan_n = cfg.scan_layers()
+    period = cfg.layer_period()
+    s = {}
+    if prefix_n:
+        s["prefix"] = {f"layer{i}": _layer_specs(cfg, i, cross_attn=cross_attn)
+                       for i in range(prefix_n)}
+    if scan_n:
+        n_blocks = scan_n // period
+        block = {f"sub{j}": _layer_specs(cfg, prefix_n + j, cross_attn=cross_attn)
+                 for j in range(period)}
+        s["blocks"] = _stack(block, n_blocks)
+    return s
+
+
+def _encoder_layer_specs(cfg: ModelConfig) -> dict:
+    """Encoder layer: bidirectional self-attention + dense FFN."""
+    d = cfg.d_model
+    return {
+        "mixer_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "mixer": _attn_specs(cfg),
+        "ff_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "ff": _ffn_specs(cfg, cfg.ff_kind, cfg.d_ff),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s = {
+        "embed": ParamSpec((cfg.padded_vocab, d), ("vocab", "embed"), fan_in=d),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "decoder": _decoder_specs(cfg, cross_attn=cfg.enc_layers > 0),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((d, cfg.padded_vocab), ("embed", "vocab"))
+    if cfg.enc_layers:
+        enc_block = _stack(_encoder_layer_specs(cfg), cfg.enc_layers)
+        s["encoder"] = {"blocks": enc_block,
+                        "final_norm": ParamSpec((d,), ("embed",), init="ones")}
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Materialization
+# ---------------------------------------------------------------------------
+
+def _init_leaf(spec: ParamSpec, key, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":
+        # A in [1, 16) -> a_log = log(A); standard mamba2 init
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "dt_bias":
+        # dt in [1e-3, 1e-1] -> bias = softplus^-1(dt)
+        u = jax.random.uniform(key, spec.shape, jnp.float32,
+                               math.log(1e-3), math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    fan = spec.fan_in or spec.shape[0]
+    if spec.init == "uniform_conv":
+        lim = 1.0 / math.sqrt(fan)
+        return jax.random.uniform(key, spec.shape, jnp.float32, -lim, lim).astype(dtype)
+    assert spec.init == "normal", spec.init
+    scale = 1.0 / math.sqrt(fan)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.dtype)
+    arrs = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct tree — used by the dry-run (never allocates)."""
+    specs = param_specs(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+                        specs, is_leaf=is_spec)
+
+
+def logical_axes(cfg: ModelConfig) -> dict:
+    return jax.tree.map(lambda s: s.axes, param_specs(cfg), is_leaf=is_spec)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               abstract_opt_state, opt_logical_axes)
+from repro.optim.schedule import warmup_cosine
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "abstract_opt_state",
+           "opt_logical_axes", "warmup_cosine"]

@@ -1,0 +1,8 @@
+from repro.sharding.specs import (AxisRules, axis_rules, can_shard, rule_axis_size,
+                                  current_rules, logical_to_spec,
+                                  make_param_shardings, shard_constraint,
+                                  RULE_SETS, rules_for)
+
+__all__ = ["AxisRules", "axis_rules", "can_shard", "rule_axis_size", "current_rules",
+           "logical_to_spec", "make_param_shardings", "shard_constraint",
+           "RULE_SETS", "rules_for"]

@@ -1,0 +1,268 @@
+"""Logical-axis sharding (MaxText-style).
+
+Every parameter and annotated activation carries *logical* axis names
+(``'embed'``, ``'heads'``, ``'ffn'``, ``'experts'``, ``'batch'``, ...).  An
+:class:`AxisRules` maps logical names to mesh axes.  Model code never mentions
+mesh axes directly, so the same model lowers on a 1-device CPU, the 16x16
+single-pod mesh, or the 2x16x16 multi-pod mesh — only the rules change.  This
+is also the hillclimbing surface: §Perf iterations swap rule sets, nothing
+else.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass
+class AxisRules:
+    """mesh + logical->mesh mapping. ``mesh=None`` disables all constraints.
+
+    ``spec_for`` is *shape-aware*: a mesh axis is only assigned to a tensor
+    dimension when the dimension size is divisible by it (GSPMD argument
+    shardings must divide evenly).  Indivisible dims fall back to a divisible
+    prefix of the requested axis tuple, or replication — and the freed mesh
+    axis stays available for a later logical axis (e.g. when 4 kv_heads can't
+    shard 16-way, the 'qk' head_dim rule picks up 'model' instead).
+    """
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+
+    def spec_for(self, logical: Tuple[Optional[str], ...],
+                 shape: Optional[Tuple[int, ...]] = None) -> P:
+        out = []
+        used = set()
+        for i, name in enumerate(logical):
+            ax = self.rules.get(name) if name else None
+            if ax is None:
+                out.append(None)
+                continue
+            axs = (ax,) if isinstance(ax, str) else tuple(ax)
+            # a mesh axis may appear at most once in a PartitionSpec
+            axs = tuple(a for a in axs
+                        if a not in used and a in self.mesh.axis_names)
+            if shape is not None:
+                # keep the longest prefix whose size product divides the dim
+                dim = shape[i]
+                kept = []
+                prod = 1
+                for a in axs:
+                    n = self.mesh.shape[a]
+                    if dim % (prod * n) == 0:
+                        kept.append(a)
+                        prod *= n
+                    else:
+                        break
+                axs = tuple(kept)
+            used.update(axs)
+            if not axs:
+                out.append(None)
+            elif len(axs) == 1:
+                out.append(axs[0])
+            else:
+                out.append(axs)
+        return P(*out)
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def shard_constraint(x, *logical: Optional[str]):
+    """Annotate activation ``x`` with logical axes; no-op without rules."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    spec = r.spec_for(tuple(logical), tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def rule_axis_size(logical: str) -> int:
+    """Product of mesh-axis sizes the current rules map ``logical`` to
+    (1 when no rules are active or the name is unmapped)."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return 1
+    ax = r.rules.get(logical)
+    if ax is None:
+        return 1
+    axs = (ax,) if isinstance(ax, str) else tuple(ax)
+    prod = 1
+    for a in axs:
+        if a in r.mesh.axis_names:
+            prod *= r.mesh.shape[a]
+    return prod
+
+
+def can_shard(n: int, logical: str) -> bool:
+    """Whether dim size ``n`` divides the mesh axes the current rules map
+    ``logical`` to (False when no rules are active)."""
+    prod = rule_axis_size(logical)
+    return prod > 1 and n % prod == 0
+
+
+def logical_to_spec(rules: AxisRules, logical: Tuple[Optional[str], ...],
+                    shape=None) -> P:
+    return rules.spec_for(tuple(logical), shape)
+
+
+def _is_axes_leaf(l) -> bool:
+    return isinstance(l, tuple) and all(
+        a is None or isinstance(a, str) for a in l)
+
+
+def make_param_shardings(rules: AxisRules, logical_tree, shape_tree=None):
+    """tree of logical-axis tuples (+ optional parallel tree of
+    shapes/ShapeDtypeStructs) -> tree of NamedSharding."""
+    if rules.mesh is None:
+        return jax.tree.map(lambda _: None, logical_tree,
+                            is_leaf=_is_axes_leaf)
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(rules.mesh, rules.spec_for(axes)),
+            logical_tree, is_leaf=_is_axes_leaf)
+    shapes = jax.tree.map(lambda s: tuple(s.shape) if hasattr(s, "shape")
+                          else tuple(s), shape_tree)
+    flat_a, treedef = jax.tree.flatten(logical_tree, is_leaf=_is_axes_leaf)
+    flat_s = treedef.flatten_up_to(shapes)
+    out = [NamedSharding(rules.mesh, rules.spec_for(a, tuple(s)))
+           for a, s in zip(flat_a, flat_s)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Rule sets (the hillclimbing surface — see EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+# Logical axes used by the model zoo:
+#   batch, seq            activations
+#   embed, embed2         residual/model dim (embed2 = second embed-sized dim)
+#   heads, kv_heads, qk   attention projections
+#   ffn                   dense-FFN hidden
+#   vocab                 embedding / lm-head vocab dim
+#   experts, expert_ffn   MoE
+#   lora                  MLA low-rank dims
+#   ssm_inner, ssm_state, ssm_heads
+#   layers                stacked-scan leading axis (never sharded)
+#   cache_seq             KV-cache sequence dim
+
+def _base_rules() -> Dict[str, MeshAxes]:
+    return {
+        "layers": None,
+        "batch": ("pod", "data"),
+        "seq": None,
+        "embed": None,
+        "embed2": None,
+        "heads": "model",
+        "kv_heads": "model",
+        # fallback: when heads/kv_heads cannot shard (indivisible), the
+        # head_dim picks up 'model' (shape-aware spec_for drops used axes)
+        "qk": "model",
+        "ffn": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_ffn": None,
+        "expert_cap": None,
+        "lora": None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "ssm_heads": "model",
+        "cache_seq": None,
+        "cache_batch": ("pod", "data"),
+    }
+
+
+def rules_tp() -> Dict[str, MeshAxes]:
+    """Pure tensor-parallel over 'model'; params replicated over 'data'."""
+    return _base_rules()
+
+
+def rules_tp_fsdp() -> Dict[str, MeshAxes]:
+    """TP over 'model' + FSDP of params over ('pod','data') on the embed dim.
+
+    Weights are stored fully sharded; GSPMD all-gathers them per layer.
+    Required for the >30B archs (params do not fit replicated)."""
+    r = _base_rules()
+    r.update(embed=("pod", "data"))
+    return r
+
+
+def rules_tp_sp() -> Dict[str, MeshAxes]:
+    """TP + sequence parallelism: residual-stream activations sharded over
+    'model' on the sequence dim between layers (norms run sequence-local)."""
+    r = _base_rules()
+    r.update(seq="model")
+    return r
+
+
+def rules_tp_fsdp_sp() -> Dict[str, MeshAxes]:
+    r = rules_tp_fsdp()
+    r.update(seq="model")
+    return r
+
+
+def rules_decode() -> Dict[str, MeshAxes]:
+    """Serving: KV cache batch-sharded over ('pod','data') and sequence-
+    sharded over 'model' (context parallelism — scales to 500k contexts and
+    sidesteps kv_heads < model_parallelism indivisibility)."""
+    r = _base_rules()
+    # cache_seq claims 'model' first on self-attn caches (batch, seq, kv, hd),
+    # so kv_heads keeps its 'model' mapping for tensors WITHOUT a cache_seq
+    # dim — e.g. seamless's cross-attention KV cache (35 GB/chip when
+    # replicated; fits once head-sharded).  Shape-aware spec_for drops it
+    # automatically where kv doesn't divide.
+    r.update(cache_seq="model")
+    return r
+
+
+def rules_decode_long() -> Dict[str, MeshAxes]:
+    """long_500k (batch=1): the data axis is idle for batch, so the KV cache
+    sequence shards over BOTH ('data','model') — 512k/256 = 2k per chip."""
+    r = rules_decode()
+    r.update(cache_seq=("data", "model"))
+    return r
+
+
+def rules_decode_batch_model() -> Dict[str, MeshAxes]:
+    """Serving for few-kv-head archs: shard cache batch over everything,
+    replicate weights' head dims (avoids indivisible kv_heads/model)."""
+    r = _base_rules()
+    r.update(batch=("pod", "data", "model"),
+             cache_batch=("pod", "data", "model"),
+             heads=None, kv_heads=None, ffn=None, vocab=None,
+             ssm_inner=None, ssm_heads=None, experts=None)
+    return r
+
+
+RULE_SETS = {
+    "tp": rules_tp,
+    "tp_fsdp": rules_tp_fsdp,
+    "tp_sp": rules_tp_sp,
+    "tp_fsdp_sp": rules_tp_fsdp_sp,
+    "decode": rules_decode,
+    "decode_long": rules_decode_long,
+    "decode_batch_model": rules_decode_batch_model,
+}
+
+
+def rules_for(name: str, mesh: Optional[Mesh]) -> AxisRules:
+    return AxisRules(mesh=mesh, rules=RULE_SETS[name]())

@@ -1,0 +1,5 @@
+from repro.utils.hlo import collective_bytes, parse_hlo_collectives
+from repro.utils.roofline import HW, RooflineTerms, roofline_from_analysis
+
+__all__ = ["collective_bytes", "parse_hlo_collectives", "HW",
+           "RooflineTerms", "roofline_from_analysis"]

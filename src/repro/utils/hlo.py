@@ -1,0 +1,87 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+``compiled.as_text()`` is the partitioned module, so shapes are PER-DEVICE.
+For each collective op we count the RESULT shape's bytes — the amount of data
+that lands on each device (all-gather: full gathered block; all-reduce:
+the reduced buffer; reduce-scatter: the scattered shard; all-to-all /
+collective-permute: the exchanged block).  A per-op breakdown is returned so
+the roofline can attribute traffic (grad all-reduce vs. FSDP all-gather vs.
+MoE exchange).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# e.g.:  %all-gather.3 = bf16[4,128]{1,0} all-gather(...)
+#        ROOT %x = (f32[2]{0}, f32[2]{0}) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+
+_COMP_RE = re.compile(r"^(%?[\w\.\-]+)\s*(?:\([^)]*\))?\s*{?\s*$")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_hlo_collectives(hlo_text: str) -> List[Tuple[str, str, int]]:
+    """Returns [(computation_name, op_kind, result_bytes_per_device)]."""
+    out = []
+    comp = "<module>"
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ("(" in stripped or "%" in stripped):
+            head = stripped.split("(")[0].strip().lstrip("%")
+            head = head.split()[0] if head else comp
+            if head and not head.startswith("ROOT"):
+                comp = head
+        m = _OP_RE.search(line)
+        if m:
+            kind = m.group(2).replace("-start", "")
+            out.append((comp, kind, _shape_bytes(m.group(1))))
+    return out
+
+
+def collective_bytes(hlo_text: str, *, body_multipliers: Dict[str, int] = None
+                     ) -> Dict[str, int]:
+    """Total per-device collective bytes by kind.
+
+    body_multipliers: {computation-name-substring: trip_count} — collectives
+    inside a matching computation (e.g. a scanned layer body) are counted
+    trip_count times.  Without it, while-loop bodies count once (the caller
+    should prefer the unrolled cost-composition path; see launch/dryrun.py).
+    """
+    body_multipliers = body_multipliers or {}
+    totals: Dict[str, int] = defaultdict(int)
+    for comp, kind, nbytes in parse_hlo_collectives(hlo_text):
+        mult = 1
+        for frag, m in body_multipliers.items():
+            if frag in comp:
+                mult = m
+                break
+        totals[kind] += nbytes * mult
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return dict(totals)

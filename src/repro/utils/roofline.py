@@ -1,0 +1,100 @@
+"""Roofline terms from dry-run analyses (TPU v5e targets).
+
+Terms (per training/serving step, seconds):
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+``compiled.cost_analysis()`` operates on the PARTITIONED module, so its
+'flops' / 'bytes accessed' are already per-device — equivalent to the
+assignment's HLO_FLOPs / (chips x peak) with global numbers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 / chip (v5e)
+    hbm_bw: float = 819e9            # bytes/s / chip
+    ici_bw: float = 50e9             # bytes/s / link (effective per chip)
+    hbm_bytes: float = 16e9          # HBM capacity / chip
+
+
+V5E = HW()
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float        # 6*N*D (or 6*N_active*D for MoE)
+    chips: int
+    hw: HW = field(default_factory=lambda: V5E)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / self.hw.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """Perfect-overlap bound: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — remat/padding/dispatch waste detector."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization achievable at the roofline bound."""
+        t = self.step_time_lower_bound
+        if t <= 0:
+            return 0.0
+        return self.model_flops_global / (self.chips * self.hw.peak_flops * t)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "chips": self.chips,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+            "step_time_lower_bound": self.step_time_lower_bound,
+        }
+
+
+def roofline_from_analysis(cost: dict, collective_bytes_per_device: float,
+                           model_flops_global: float, chips: int,
+                           hw: HW = V5E) -> RooflineTerms:
+    return RooflineTerms(
+        flops_per_device=float(cost.get("flops", 0.0)),
+        hbm_bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=collective_bytes_per_device,
+        model_flops_global=model_flops_global,
+        chips=chips, hw=hw)

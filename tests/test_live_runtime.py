@@ -1,0 +1,34 @@
+"""Live multi-device scenarios (subprocesses with 8 virtual CPU devices —
+conftest keeps the main process at 1 device per the assignment)."""
+import pytest
+
+
+@pytest.mark.slow
+def test_elastic_rescale_preserves_trajectory(helper):
+    out = helper("elastic_trajectory.py", "yi-6b")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_rescale_moe_arch(helper):
+    out = helper("elastic_trajectory.py", "granite-moe-3b-a800m")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_rescale_ssm_arch(helper):
+    out = helper("elastic_trajectory.py", "mamba2-1.3b")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_operator_priority_and_fault_tolerance(helper):
+    out = helper("operator_scenario.py")
+    assert "SCENARIO1 OK" in out and "SCENARIO2 OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_small_mesh(helper):
+    out = helper("dryrun_small.py")
+    assert "OK" in out
+    assert "yi-6b|train_4k" in out

@@ -1,0 +1,193 @@
+"""Policy scenario tests — each pinned to a sentence of the paper.
+
+All scenarios run through the real simulator (virtual clock) with trivial
+constant-rate workloads so slot arithmetic is exact.
+"""
+import math
+
+import pytest
+
+from repro.core.job import JobSpec, JobStatus
+from repro.core.perf_model import PiecewiseScalingModel, RescaleModel
+from repro.core.policies import PolicyConfig
+from repro.core.simulator import Simulator, SimWorkload
+
+
+def wl(steps=1000.0, t=1.0):
+    """Constant time-per-step workload with zero-ish rescale overhead."""
+    return SimWorkload(
+        scaling=PiecewiseScalingModel(((1.0, t), (128.0, t))),
+        total_work=steps, data_bytes=0.0, rescale=RescaleModel())
+
+
+def sim(slots=16, gap=0.0, reserve=0, redistribute_idle=True):
+    return Simulator(slots, PolicyConfig(rescale_gap=gap,
+                                         launcher_reserve=reserve,
+                                         redistribute_idle=redistribute_idle))
+
+
+def test_job_starts_at_max_when_cluster_empty():
+    s = sim()
+    s.submit(JobSpec("a", 3, 2, 8, 0.0), wl(10))
+    s.run()
+    a = s.cluster.jobs["a"]
+    assert a.start_time == 0.0
+    # started at max_replicas (8 <= 16 free)
+    assert a.end_time == pytest.approx(10.0, abs=1e-6)
+
+
+def test_new_job_starts_at_min_instead_of_shrinking():
+    """§3.2.1: 'our scheduling algorithm will run the higher priority job at
+    its minimum replicas configuration to avoid a shrink call'."""
+    s = sim(slots=16)
+    s.submit(JobSpec("low", 1, 4, 12, 0.0), wl(1000))   # takes 12, leaves 4
+    s.submit(JobSpec("high", 5, 2, 8, 1.0), wl(10))
+    s.queue.push(2.0, "noop", None)
+    # run only the submissions
+    while len(s.queue):
+        ev = s.queue.pop()
+        s.now = max(s.now, ev.time)
+        if ev.kind == "submit":
+            s.cluster.add_job(ev.payload)
+            s.policy.on_new_job(s.cluster, ev.payload, s.now, s.actions)
+        if s.now >= 2.0:
+            break
+    low, high = s.cluster.jobs["low"], s.cluster.jobs["high"]
+    assert low.replicas == 12          # NOT shrunk
+    assert high.replicas == 4          # started in the free gap (>= min 2)
+    assert high.status == JobStatus.RUNNING
+
+
+def test_shrink_happens_when_min_cannot_fit():
+    """§3.2.1: 'if enough slots are not available to start the higher priority
+    job even at its minimum replicas configuration, the lower priority job
+    will be scaled down'."""
+    s = sim(slots=16)
+    s.submit(JobSpec("low", 1, 4, 16, 0.0), wl(1000))   # takes all 16
+    s.submit(JobSpec("high", 5, 8, 12, 1.0), wl(10))
+    s.run()
+    low, high = s.cluster.jobs["low"], s.cluster.jobs["high"]
+    assert low.rescale_count >= 1
+    assert high.start_time == pytest.approx(1.0, abs=1e-6)
+    # low was shrunk toward min to give high its max config if possible
+    # (16 - 4 = 12 freed = high's max)
+    assert high.end_time is not None
+
+
+def test_rescale_gap_blocks_shrink():
+    """§3.2.1: 'a configurable minimum gap between any two scheduling
+    events'. A job inside its cool-down cannot be shrunk; the newcomer
+    queues."""
+    s = sim(slots=16, gap=100.0)
+    s.submit(JobSpec("low", 1, 4, 16, 0.0), wl(1000))
+    s.submit(JobSpec("high", 5, 8, 12, 1.0), wl(10))
+    # process just the two submits
+    for _ in range(2):
+        ev = s.queue.pop()
+        s.now = max(s.now, ev.time)
+        s.cluster.add_job(ev.payload)
+        s.policy.on_new_job(s.cluster, ev.payload, s.now, s.actions)
+    assert s.cluster.jobs["low"].replicas == 16    # protected by T_rescale_gap
+    assert s.cluster.jobs["high"].status == JobStatus.QUEUED
+
+
+def test_higher_priority_jobs_never_shrunk_for_lower():
+    """Fig. 2 guard: only jobs with priority <= the newcomer's may shrink."""
+    s = sim(slots=16)
+    s.submit(JobSpec("vip", 5, 4, 16, 0.0), wl(1000))
+    s.submit(JobSpec("pleb", 1, 8, 8, 1.0), wl(10))
+    for _ in range(2):
+        ev = s.queue.pop()
+        s.now = max(s.now, ev.time)
+        s.cluster.add_job(ev.payload)
+        s.policy.on_new_job(s.cluster, ev.payload, s.now, s.actions)
+    assert s.cluster.jobs["vip"].replicas == 16
+    assert s.cluster.jobs["pleb"].status == JobStatus.QUEUED
+
+
+def test_completion_expands_highest_priority_first():
+    """Fig. 3: freed slots go to running/queued jobs in priority order."""
+    s = sim(slots=16)
+    s.submit(JobSpec("short", 4, 8, 8, 0.0), wl(5))          # rigid 8
+    s.submit(JobSpec("p3", 3, 4, 16, 0.0), wl(1000))         # gets 8, wants 16
+    s.submit(JobSpec("p2", 2, 4, 16, 0.0), wl(1000))         # queued
+    # run until `short` completes
+    while len(s.queue):
+        ev = s.queue.pop()
+        s.now = max(s.now, ev.time)
+        if ev.kind == "submit":
+            s.cluster.add_job(ev.payload)
+            s.policy.on_new_job(s.cluster, ev.payload, s.now, s.actions)
+        elif ev.kind == "complete":
+            jid, ver = ev.payload
+            job = s.cluster.jobs[jid]
+            if job.version != ver:
+                continue
+            s._sync_progress(job)
+            freed = job.replicas
+            job.status = JobStatus.COMPLETED
+            job.end_time = s.now
+            job.replicas = 0
+            s.policy.on_job_complete(s.cluster, freed, s.now, s.actions)
+            break
+    # p3 (higher priority) expanded to max before p2 got anything
+    assert s.cluster.jobs["p3"].replicas == 16
+    assert s.cluster.jobs["p2"].status == JobStatus.QUEUED
+
+
+def test_fcfs_among_equal_priorities():
+    s = sim(slots=8)
+    s.submit(JobSpec("b_later", 3, 8, 8, 1.0), wl(50))
+    s.submit(JobSpec("a_early", 3, 8, 8, 0.5), wl(50))
+    s.submit(JobSpec("running", 3, 8, 8, 0.0), wl(10))
+    s.run()
+    a, b = s.cluster.jobs["a_early"], s.cluster.jobs["b_later"]
+    assert a.start_time < b.start_time
+
+
+def test_launcher_reserve_reproduces_paper_freeslots_minus_one():
+    s = sim(slots=8, reserve=1)
+    s.submit(JobSpec("a", 3, 2, 8, 0.0), wl(10, t=1.0))
+    s.run()
+    # with the launcher slot reserved only 7 replicas fit
+    assert s.cluster.jobs["a"].end_time == pytest.approx(10.0, abs=1e-6)
+    assert s.util.events[0][1] == 7
+
+
+def test_pseudocode_faithful_redistribution_can_strand_slots():
+    """DESIGN.md §6.3: Fig. 3 redistributes only freed slots; a queued job
+    whose min exceeds every later completion starves even on an idle
+    cluster. redistribute_idle=False reproduces the paper behavior."""
+    specs = [
+        JobSpec("big", 5, 12, 16, 0.0),       # holds 16
+        JobSpec("small1", 4, 2, 2, 1.0),      # queued, then gets slots
+        JobSpec("wide", 3, 16, 16, 2.0),      # needs 16 at once
+    ]
+    workloads = {"big": wl(10), "small1": wl(3), "wide": wl(5)}
+
+    def run(redistribute_idle):
+        s = sim(slots=16, redistribute_idle=redistribute_idle)
+        for sp in specs:
+            s.submit(sp, workloads[sp.job_id])
+        m = s.run()
+        return s, m
+
+    s_fixed, m_fixed = run(True)
+    assert m_fixed.dropped_jobs == 0
+    s_paper, m_paper = run(False)
+    # with faithful redistribution `wide` never reaches 16 freed at once
+    assert s_paper.cluster.jobs["wide"].end_time is None
+    assert m_paper.dropped_jobs == 1
+
+
+def test_moldable_never_rescales_but_starts_queued_jobs():
+    """§4.3.2: moldable = elastic with an infinite T_rescale_gap; queued jobs
+    must still start when slots free up."""
+    s = Simulator(16, PolicyConfig.moldable())
+    s.submit(JobSpec("a", 3, 8, 16, 0.0), wl(10))
+    s.submit(JobSpec("b", 3, 8, 16, 1.0), wl(10))
+    m = s.run()
+    a, b = s.cluster.jobs["a"], s.cluster.jobs["b"]
+    assert a.rescale_count == 0 and b.rescale_count == 0
+    assert b.end_time is not None
+    assert m.dropped_jobs == 0

@@ -1,0 +1,157 @@
+"""Hypothesis property tests over random job streams — the scheduler's
+invariants must hold for ANY workload, policy variant, and gap."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.job import JobSpec, JobStatus
+from repro.core.metrics import UtilizationLog
+from repro.core.perf_model import PiecewiseScalingModel, RescaleModel
+from repro.core.policies import PolicyConfig
+from repro.core.simulator import Simulator, SimWorkload
+
+
+@st.composite
+def job_streams(draw):
+    n = draw(st.integers(2, 12))
+    total_slots = draw(st.sampled_from([8, 16, 64]))
+    jobs = []
+    for i in range(n):
+        mn = draw(st.integers(1, max(1, total_slots // 2)))
+        mx = draw(st.integers(mn, total_slots))
+        jobs.append(dict(
+            job_id=f"j{i:02d}",
+            priority=draw(st.integers(1, 5)),
+            min_replicas=mn,
+            max_replicas=mx,
+            submit_time=float(draw(st.integers(0, 500))),
+            work=float(draw(st.integers(1, 200))),
+            t_step=draw(st.floats(0.1, 5.0)),
+        ))
+    gap = draw(st.sampled_from([0.0, 30.0, 180.0, math.inf]))
+    return total_slots, gap, jobs
+
+
+class _AuditedSim(Simulator):
+    """Simulator that checks invariants after every event."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.max_used = 0
+
+    def _record_util(self):
+        super()._record_util()
+        used = self.cluster.used_slots
+        assert used <= self.cluster.total_slots, "capacity exceeded"
+        self.max_used = max(self.max_used, used)
+        for j in self.cluster.jobs.values():
+            if j.status == JobStatus.RUNNING:
+                assert j.spec.min_replicas <= j.replicas <= j.spec.max_replicas
+            else:
+                assert j.replicas == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(job_streams())
+def test_invariants_hold_for_any_stream(stream):
+    total_slots, gap, jobs = stream
+    sim = _AuditedSim(total_slots, PolicyConfig(rescale_gap=gap))
+    for j in jobs:
+        sim.submit(
+            JobSpec(j["job_id"], j["priority"], j["min_replicas"],
+                    j["max_replicas"], j["submit_time"]),
+            SimWorkload(
+                scaling=PiecewiseScalingModel(
+                    ((1.0, j["t_step"]), (float(total_slots), j["t_step"]))),
+                total_work=j["work"], data_bytes=1e6,
+                rescale=RescaleModel()))
+    m = sim.run()
+    # with redistribute_idle (default) every feasible job completes
+    assert m.dropped_jobs == 0
+    # completed jobs have consistent timestamps
+    for j in sim.cluster.jobs.values():
+        assert j.status == JobStatus.COMPLETED
+        assert j.spec.submit_time <= j.start_time <= j.end_time
+    assert 0.0 <= m.utilization <= 1.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(job_streams())
+def test_rescale_gap_respected(stream):
+    """No two scheduling actions on one RUNNING job within T_rescale_gap."""
+    total_slots, _, jobs = stream
+    gap = 50.0
+
+    actions_log = {}
+
+    class _GapSim(Simulator):
+        class _Act:
+            pass
+
+    sim = Simulator(total_slots, PolicyConfig(rescale_gap=gap))
+    orig_rescale = sim.actions._rescale
+
+    def audited_rescale(job, replicas):
+        prev = actions_log.get(job.job_id)
+        if prev is not None and job.replicas != replicas:
+            assert sim.now - prev >= gap - 1e-9, \
+                f"{job.job_id} rescaled {sim.now - prev:.1f}s after last action"
+        ok = orig_rescale(job, replicas)
+        if ok:
+            actions_log[job.job_id] = sim.now
+        return ok
+
+    sim.actions._rescale = audited_rescale
+    for j in jobs:
+        sim.submit(
+            JobSpec(j["job_id"], j["priority"], j["min_replicas"],
+                    j["max_replicas"], j["submit_time"]),
+            SimWorkload(
+                scaling=PiecewiseScalingModel(
+                    ((1.0, j["t_step"]), (float(total_slots), j["t_step"]))),
+                total_work=j["work"], data_bytes=1e6,
+                rescale=RescaleModel()))
+        actions_log[j["job_id"]] = None
+    actions_log = {}
+    sim.run()
+
+
+@settings(max_examples=30, deadline=None)
+@given(job_streams(), st.integers(2, 8))
+def test_feasibility_constraint_divides(stream, divisor_base):
+    """With spec.divides set, running replica counts always divide it."""
+    total_slots, gap, jobs = stream
+    divides = divisor_base * 12  # rich divisor structure
+    sim = Simulator(total_slots, PolicyConfig(rescale_gap=gap))
+    checked = []
+
+    for j in jobs:
+        cap = max(1, min(j["max_replicas"], divides))
+        mx = max(r for r in range(1, cap + 1) if divides % r == 0)
+        spec = JobSpec(j["job_id"], j["priority"], 1, mx, j["submit_time"],
+                       divides=divides)
+        checked.append(spec.job_id)
+        sim.submit(spec, SimWorkload(
+            scaling=PiecewiseScalingModel(((1.0, 1.0), (64.0, 1.0))),
+            total_work=j["work"], data_bytes=0.0, rescale=RescaleModel()))
+
+    orig = sim.actions.create
+
+    def audited_create(job, replicas):
+        if job.spec.divides:
+            assert divides % replicas == 0, (job.job_id, replicas)
+        return orig(job, replicas)
+
+    sim.actions.create = audited_create
+    m = sim.run()
+    assert m.dropped_jobs == 0
+
+
+def test_utilization_log_integration():
+    u = UtilizationLog(10)
+    u.record(0.0, 5)
+    u.record(10.0, 10)
+    u.record(20.0, 0)
+    assert u.average(0.0, 20.0) == (5 * 10 + 10 * 10) / (10 * 20)
+    assert u.average(10.0, 20.0) == 1.0
+    assert u.average(0.0, 10.0) == 0.5

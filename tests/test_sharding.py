@@ -1,0 +1,97 @@
+"""Shape-aware logical-axis rules."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.sharding import AxisRules, RULE_SETS, make_param_shardings
+from repro.sharding.specs import _base_rules
+
+
+@pytest.fixture(scope="module")
+def mesh1d():
+    # single real device: a (1,1) mesh is enough to exercise spec logic
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def _fake_mesh_rules(data=16, model=16):
+    """AxisRules with a fake mesh object (spec_for only reads axis_names and
+    shape) so divisibility logic is testable without 256 devices."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": data, "model": model}
+    return AxisRules(mesh=FakeMesh(), rules=_base_rules())
+
+
+def test_divisible_dims_get_sharded():
+    r = _fake_mesh_rules()
+    spec = r.spec_for(("vocab", "embed"), (64_000, 4096))
+    assert spec == P("model", None)
+
+
+def test_indivisible_dim_falls_back_to_replication():
+    r = _fake_mesh_rules()
+    # 50280 % 16 != 0 -> vocab cannot shard
+    spec = r.spec_for(("vocab", "embed"), (50_280, 2048))
+    assert spec == P(None, None)
+
+
+def test_freed_axis_flows_to_later_dim():
+    """kv_heads=4 can't shard 16-way; the qk head_dim picks up 'model'."""
+    r = _fake_mesh_rules()
+    spec = r.spec_for(("embed", "kv_heads", "qk"), (4096, 4, 128))
+    assert spec == P(None, None, "model")
+    # but when heads CAN shard, qk must not reuse the axis
+    spec = r.spec_for(("embed", "heads", "qk"), (4096, 32, 128))
+    assert spec == P(None, "model", None)
+
+
+def test_tuple_axis_prefix_fallback():
+    r = _fake_mesh_rules()
+    r.rules["batch"] = ("pod", "data")
+
+    class FakeMesh3:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+    r.mesh = FakeMesh3()
+    # 32 % (2*16) == 0 -> both axes
+    assert r.spec_for(("batch",), (32,)) == P(("pod", "data"))
+    # 2 % 2 == 0 but 2 % 32 != 0 -> only the 'pod' prefix
+    assert r.spec_for(("batch",), (2,)) == P("pod")
+    # batch=1: replicate
+    assert r.spec_for(("batch",), (1,)) == P(None)
+
+
+@pytest.mark.parametrize("arch", sorted(ALL_ARCHS))
+@pytest.mark.parametrize("rules_name", ["tp", "tp_fsdp_sp", "decode"])
+def test_rules_produce_valid_shardings_for_all_params(arch, rules_name):
+    """Every param's sharding divides its shape (the GSPMD requirement the
+    dry-run enforces for real)."""
+    from repro.models import abstract_params, logical_axes
+    cfg = get_config(arch)
+    r = _fake_mesh_rules()
+    r.rules = RULE_SETS[rules_name]()
+    ap = abstract_params(cfg)
+    ax = logical_axes(cfg)
+    flat_ax, treedef = jax.tree.flatten(
+        ax, is_leaf=lambda l: isinstance(l, tuple))
+    flat_sh = treedef.flatten_up_to(ap)
+    for axes, spec_shape in zip(flat_ax, flat_sh):
+        spec = r.spec_for(axes, tuple(spec_shape.shape))
+        for dim, entry in zip(spec_shape.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axs = (entry,) if isinstance(entry, str) else entry
+            prod = 1
+            for a in axs:
+                prod *= r.mesh.shape[a]
+            assert dim % prod == 0, (arch, axes, spec_shape.shape, spec)
+
+
+def test_no_rules_is_noop(mesh1d):
+    from repro.sharding import axis_rules, shard_constraint
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert shard_constraint(x, "batch", "embed") is x  # no context -> no-op

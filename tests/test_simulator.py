@@ -1,0 +1,137 @@
+"""Simulator-level behavior: metrics arithmetic, paper-qualitative orderings
+(Fig. 7/8, Table 1), and perf-model shapes (Fig. 4/5)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.perf_model import (JACOBI_SIZES, JacobiModel,
+                                   PiecewiseScalingModel, RescaleModel,
+                                   arch_model_from_config)
+from repro.core.simulator import (VARIANTS, jacobi_workload, make_jacobi_jobs,
+                                  run_variant)
+
+
+def _avg_metrics(variant, seeds, gap, tgap=180.0):
+    rows = []
+    for seed in seeds:
+        specs = make_jacobi_jobs(seed=seed, n_jobs=16, submission_gap=gap)
+        m = run_variant(variant, specs, total_slots=64, rescale_gap=tgap)
+        rows.append([m.total_time, m.utilization, m.weighted_mean_response,
+                     m.weighted_mean_completion, m.dropped_jobs])
+    return np.mean(rows, axis=0)
+
+
+SEEDS = range(8)
+
+
+def test_paper_table1_orderings_at_gap90():
+    """Table 1 (sim columns): utilization elastic > rigid-max > moldable >
+    rigid-min; makespan elastic lowest; response elastic < moldable < max."""
+    m = {v: _avg_metrics(v, SEEDS, gap=90.0) for v in VARIANTS}
+    util = {v: m[v][1] for v in VARIANTS}
+    assert util["elastic"] > util["rigid_max"] > util["moldable"] > util["rigid_min"]
+    total = {v: m[v][0] for v in VARIANTS}
+    assert total["elastic"] < min(total["rigid_min"], total["moldable"])
+    resp = {v: m[v][2] for v in VARIANTS}
+    assert resp["elastic"] < resp["moldable"] < resp["rigid_max"]
+    compl = {v: m[v][3] for v in VARIANTS}
+    assert compl["rigid_min"] == max(compl.values())
+    assert all(m[v][4] == 0 for v in VARIANTS)   # no dropped jobs
+
+
+def test_fig8_tgap_sweep_elastic_approaches_moldable():
+    """Fig. 8: 'all the metrics for the elastic scheduler approach the
+    moldable scheduler as T_rescale_gap is increased'."""
+    seeds = range(6)
+    mold = _avg_metrics("moldable", seeds, gap=180.0)
+    el_small = _avg_metrics("elastic", seeds, gap=180.0, tgap=10.0)
+    el_huge = _avg_metrics("elastic", seeds, gap=180.0, tgap=1e9)
+    # identical at infinite gap
+    np.testing.assert_allclose(el_huge, mold, rtol=1e-9)
+    # and utilization decreases monotonically toward it
+    assert el_small[1] >= el_huge[1] - 1e-9
+
+
+def test_fig7_total_time_converges_at_large_gaps():
+    """Fig. 7b: schedulers converge as the submission gap grows (each job
+    runs alone at max replicas)."""
+    seeds = range(4)
+    big = {v: _avg_metrics(v, seeds, gap=3000.0) for v in
+           ("rigid_max", "moldable", "elastic")}
+    ts = [big[v][0] for v in big]
+    assert max(ts) - min(ts) < 0.02 * max(ts)
+
+
+def test_jacobi_strong_scaling_shape():
+    """Fig. 4a: larger grids scale better (communication amortized)."""
+    small, large = JacobiModel(512, 1), JacobiModel(16_384, 1)
+    def speedup(m):
+        return m.time_per_step(1) / m.time_per_step(64)
+    assert speedup(large) > speedup(small)
+    # time per step decreases monotonically in replicas for the large grid
+    ts = [large.time_per_step(p) for p in (1, 2, 4, 8, 16, 32, 64)]
+    assert all(a > b for a, b in zip(ts, ts[1:]))
+
+
+def test_rescale_overhead_asymptotics():
+    """Fig. 5: restart grows with replica count; checkpoint/restore shrink
+    with replicas (fixed problem); load-balance flat in replicas, grows with
+    problem size; in-memory ckpt stays low even at 4 GB."""
+    rm = RescaleModel()
+    st16 = rm.stages(16, 8, 4e9)
+    st64 = rm.stages(64, 32, 4e9)
+    assert st64["restart"] > st16["restart"]
+    assert st64["checkpoint"] < st16["checkpoint"]
+    assert st64["load_balance"] == st16["load_balance"]
+    small = rm.stages(32, 16, 2 * 4.0 * 512 ** 2)
+    big = rm.stages(32, 16, 4e9)
+    assert big["load_balance"] > small["load_balance"]
+    assert big["checkpoint"] + big["restore"] < 1.0       # "significantly low"
+    # restart dominates small problems (paper Fig. 5c)
+    assert small["restart"] > small["checkpoint"] + small["restore"]
+
+
+def test_workload_generator_matches_paper_setup():
+    specs = make_jacobi_jobs(seed=0, n_jobs=16, submission_gap=90.0)
+    assert len(specs) == 16
+    assert all(1 <= s.priority <= 5 for s in specs)
+    assert [s.submit_time for s in specs] == [90.0 * i for i in range(16)]
+    sizes = {s.workload for s in specs}
+    assert sizes <= set(JACOBI_SIZES)
+    for s in specs:
+        d = JACOBI_SIZES[s.workload]
+        assert (s.min_replicas, s.max_replicas) == (d["min_replicas"],
+                                                    d["max_replicas"])
+
+
+def test_simulator_progress_accounting_exact():
+    """A job rescaled mid-flight finishes at the analytically exact time."""
+    from repro.core.job import JobSpec
+    from repro.core.policies import PolicyConfig
+    from repro.core.simulator import Simulator, SimWorkload
+    # rate 1 step/s at 8 reps, 0.5 step/s at 4 reps
+    scal = PiecewiseScalingModel(((4.0, 2.0), (8.0, 1.0)))
+    sim = Simulator(8, PolicyConfig(rescale_gap=0.0))
+    sim.submit(JobSpec("a", 1, 4, 8, 0.0), SimWorkload(scal, 100.0, 0.0))
+    sim.submit(JobSpec("b", 5, 4, 4, 10.0), SimWorkload(
+        PiecewiseScalingModel(((4.0, 1.0),)), 20.0, 0.0))
+    m = sim.run()
+    a = sim.cluster.jobs["a"]
+    b = sim.cluster.jobs["b"]
+    # b starts the moment a's shrink frees the slots (overhead is charged to
+    # the shrunk job, not the newcomer): 10.0 + 20 steps at 1 s/step
+    assert b.end_time == pytest.approx(30.0, abs=1e-6)
+    assert a.rescale_count >= 1
+    assert a.end_time > 100.0     # shrink + overhead slowed it down
+
+
+def test_arch_scaling_model_monotone():
+    """TPU training jobs: step time decreases with replica groups but is
+    lower-bounded by the gradient all-reduce."""
+    from repro.configs import get_config
+    m = arch_model_from_config(get_config("yi-6b"))
+    ts = [m.time_per_step(g) for g in (1, 2, 4, 8, 16)]
+    assert all(a > b for a, b in zip(ts, ts[1:]))
+    # communication floor: speedup is sublinear
+    assert ts[0] / ts[-1] < 16.0
