@@ -14,6 +14,7 @@ MODULES = [
     ("fig7", "benchmarks.fig7_submission_gap"),
     ("fig8", "benchmarks.fig8_rescale_gap"),
     ("table1", "benchmarks.table1_policies"),
+    ("table2", "benchmarks.table2_cloud_cost"),
     ("roofline", "benchmarks.roofline"),
 ]
 

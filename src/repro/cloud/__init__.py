@@ -1,0 +1,15 @@
+"""Cloud provider layer: dynamic node pools, pricing, spot preemption, and a
+CLUES-style node autoscaler — the pay-as-you-go substrate the paper's elastic
+scheduler is judged against (see README §Cloud subsystem).
+"""
+from repro.cloud.cost import CostAccountant, CostReport
+from repro.cloud.node_autoscaler import AutoscalerConfig, NodeAutoscaler
+from repro.cloud.provider import (ON_DEMAND, SPOT, CloudProvider, Node,
+                                  NodePool, NodeState)
+from repro.cloud.sim import CloudSimulator
+
+__all__ = [
+    "CostAccountant", "CostReport", "AutoscalerConfig", "NodeAutoscaler",
+    "ON_DEMAND", "SPOT", "CloudProvider", "Node", "NodePool", "NodeState",
+    "CloudSimulator",
+]

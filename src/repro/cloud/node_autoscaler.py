@@ -1,0 +1,162 @@
+"""CLUES-style node power manager (cf. the CLUES/indigo orchestrators and
+Kub, arXiv:2410.10655): watch queue pressure and idle time, provision and
+decommission whole nodes with hysteresis and a budget cap.
+
+This is *node-level* elasticity, orthogonal to the paper's *job-level*
+elasticity: the scheduling policy shrinks/expands jobs inside the provisioned
+capacity, while the autoscaler decides how much capacity to pay for.
+
+Scale-up:   unmet demand = queued min_replicas + headroom - free - booting.
+            Provision when positive, at most every ``scale_up_cooldown`` s,
+            never past ``budget_cap`` dollars, preferring spot pools while
+            their share of provisioned slots is below ``spot_fraction``.
+Scale-down: only after the cluster has been continuously idle enough to free
+            a whole node for ``idle_timeout`` s AND ``scale_down_cooldown``
+            has passed since the last release (hysteresis against thrash).
+            The most expensive removable node goes first.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.cloud.provider import (ON_DEMAND, SPOT, CloudProvider, Node,
+                                  NodePool, NodeState)
+
+
+@dataclass(frozen=True)
+class AutoscalerConfig:
+    tick_interval: float = 30.0         # evaluation period (s)
+    scale_up_cooldown: float = 60.0
+    scale_down_cooldown: float = 240.0
+    idle_timeout: float = 300.0         # continuous idleness before release
+    headroom_slots: int = 0             # keep this many free slots warm
+    # stop provisioning when accrued spend + a COMMIT_HOURS charge for every
+    # booting/new node would exceed this ($) — the commitment term is what
+    # makes the cap bite during boot windows, before billing has started
+    budget_cap: float = math.inf
+    spot_fraction: float = 0.0          # target share of slots from spot
+    max_horizon: float = 7 * 24 * 3600.0  # stop ticking past this sim time
+
+    def __post_init__(self):
+        assert self.tick_interval > 0.0
+        assert 0.0 <= self.spot_fraction <= 1.0
+
+
+class NodeAutoscaler:
+    def __init__(self, provider: CloudProvider,
+                 cfg: AutoscalerConfig = AutoscalerConfig()):
+        self.provider = provider
+        self.cfg = cfg
+        self._last_up = -math.inf
+        self._last_down = -math.inf
+        self._idle_since: Optional[float] = None
+        self.scale_ups = 0
+        self.scale_downs = 0
+
+    # -- main entry (called from the autoscale_tick event) -------------------
+    def evaluate(self, sim, now: float) -> None:
+        cluster = sim.cluster
+        queued = cluster.queued_jobs()
+        pending = self.provider.pending_slots()
+        # only satisfiable jobs create demand: a min_replicas beyond what the
+        # pools could EVER provide must not trigger provisioning (it would
+        # thrash provision/release cycles forever)
+        max_slots = self.provider.theoretical_max_slots()
+        demand = (sum(j.spec.min_replicas for j in queued
+                      if j.spec.min_replicas <= max_slots)
+                  + self.cfg.headroom_slots
+                  - max(0, cluster.free_slots) - pending)
+        stranded = False
+        if demand > 0:
+            if now - self._last_up < self.cfg.scale_up_cooldown:
+                self._idle_since = None
+                return
+            if self._provision(sim, now, demand):
+                self._last_up = now
+                self._idle_since = None
+                return
+            # demand exists but nothing could be provisioned (pools at
+            # max_nodes / budget cap): the queued jobs are STRANDED — fall
+            # through so capacity they can never use is still released
+            # instead of billing idle until the horizon
+            stranded = True
+
+        if (queued or pending) and not stranded:
+            # work is waiting on capacity already on its way: not idle
+            self._idle_since = None
+            return
+
+        victim = self._removable(cluster)
+        if victim is None:
+            self._idle_since = None
+            return
+        if self._idle_since is None:
+            self._idle_since = now
+            return
+        if (now - self._idle_since >= self.cfg.idle_timeout
+                and now - self._last_down >= self.cfg.scale_down_cooldown):
+            sim.decommission(victim.node_id)
+            self._last_down = now
+            self._idle_since = None     # restart the idle clock
+            self.scale_downs += 1
+
+    # -- scale-up ------------------------------------------------------------
+    #: every held node is assumed to bill at least this many hours in total
+    #: (the classic cloud billing quantum); the unbilled remainder counts
+    #: against budget_cap — otherwise the cap check is loop- and tick-
+    #: invariant during boot windows (billing starts at node_up) and a burst
+    #: could commit spend far past the cap
+    COMMIT_HOURS = 1.0
+
+    def _provision(self, sim, now: float, demand: int) -> bool:
+        committed = sum(
+            max(0.0, self.COMMIT_HOURS - n.billed_hours(now))
+            * n.pool.price_per_node_hour
+            for n in self.provider.nodes_in(NodeState.PROVISIONING,
+                                            NodeState.UP))
+        provisioned = False
+        while demand > 0:
+            node = None
+            for pool in self._pool_preference():
+                commit = pool.price_per_node_hour * self.COMMIT_HOURS
+                if (sim.accountant.spend_through(now) + committed + commit
+                        > self.cfg.budget_cap):
+                    continue            # this pool would bust the budget
+                node = self.provider.request_node(pool.name, now, sim.queue)
+                if node is not None:
+                    committed += commit
+                    break
+            if node is None:
+                break                   # every pool at max_nodes or over cap
+            demand -= node.slots
+            provisioned = True
+            self.scale_ups += 1
+        return provisioned
+
+    def _pool_preference(self) -> List[NodePool]:
+        """Spot pools first while the provisioned spot share is below target,
+        then by ascending $/slot-hour within each market."""
+        pools = sorted(self.provider.pools.values(),
+                       key=lambda p: p.price_per_slot_hour)
+        spot = [p for p in pools if p.market == SPOT]
+        on_demand = [p for p in pools if p.market != SPOT]
+        total = self.provider.market_slots(SPOT) + \
+            self.provider.market_slots(ON_DEMAND)
+        share = self.provider.market_slots(SPOT) / total if total else 0.0
+        if spot and share < self.cfg.spot_fraction:
+            return spot + on_demand
+        return on_demand + spot
+
+    # -- scale-down ----------------------------------------------------------
+    def _removable(self, cluster) -> Optional[Node]:
+        """A node whose whole slot count fits in the current idle surplus, so
+        releasing it displaces no running work.  Most expensive first."""
+        surplus = cluster.free_slots - self.cfg.headroom_slots
+        candidates = [n for n in self.provider.up_nodes()
+                      if n.slots <= surplus]
+        if not candidates:
+            return None
+        return max(candidates, key=lambda n: (n.pool.price_per_slot_hour,
+                                              n.node_id))

@@ -1,0 +1,214 @@
+"""Cloud provider simulation: node pools, pricing, boot/teardown latency, and
+spot-market preemption.
+
+The provider owns *node lifecycle* only; it never touches the scheduler.  It
+communicates with the simulator exclusively by pushing events into the shared
+:class:`~repro.core.events.EventQueue`:
+
+    request_node()  --boot_latency-->   "node_up"     (capacity attaches)
+    release_node()  --teardown_delay--> "node_down"   (billing stops)
+    spot fate drawn at request time --> "spot_kill"   (capacity yanked NOW)
+
+Billing semantics (documented in README §Cloud): a node is billed from the
+moment it comes UP until it goes DOWN (normal teardown or spot kill).  Boot
+time is not billed — the cloud charges for running instances, but the
+*scheduler* still feels the boot latency as provisioning lag.  A DRAINING
+node (released, awaiting teardown) no longer offers capacity but still bills,
+which is exactly the wasted-teardown money a real cluster pays.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.events import EventQueue
+
+ON_DEMAND = "on_demand"
+SPOT = "spot"
+
+
+class NodeState(Enum):
+    PROVISIONING = "provisioning"   # requested, booting
+    UP = "up"                       # offering capacity, billing
+    DRAINING = "draining"           # released: no capacity, still billing
+    DOWN = "down"                   # gone, billing stopped
+
+
+@dataclass(frozen=True)
+class NodePool:
+    """One instance type / market combination (e.g. c5.2xlarge on-demand)."""
+    name: str
+    slots_per_node: int = 8
+    price_per_slot_hour: float = 0.048     # $/slot-hour (~c5.2xlarge / 8 vCPU)
+    market: str = ON_DEMAND
+    boot_latency: float = 120.0            # request -> capacity available (s)
+    teardown_delay: float = 30.0           # release -> billing stops (s)
+    max_nodes: int = 64
+    initial_nodes: int = 0                 # provisioned (UP) at t=0, free
+    # spot only: mean node lifetime before the market reclaims it; the fate
+    # is drawn once per node from Exp(mean) at request time (memoryless)
+    spot_lifetime_mean: float = 3600.0
+
+    def __post_init__(self):
+        assert self.market in (ON_DEMAND, SPOT), self.market
+        assert self.slots_per_node >= 1
+        assert self.price_per_slot_hour >= 0.0
+
+    @property
+    def price_per_node_hour(self) -> float:
+        return self.price_per_slot_hour * self.slots_per_node
+
+
+@dataclass
+class Node:
+    node_id: str
+    pool: NodePool
+    state: NodeState = NodeState.PROVISIONING
+    requested_at: float = 0.0
+    up_at: Optional[float] = None
+    billing_ends_at: Optional[float] = None
+    kill_at: Optional[float] = None        # spot reclaim fate; None = safe
+
+    @property
+    def slots(self) -> int:
+        return self.pool.slots_per_node
+
+    def billed_hours(self, now: float) -> float:
+        if self.up_at is None:
+            return 0.0
+        end = self.billing_ends_at if self.billing_ends_at is not None else now
+        return max(0.0, end - self.up_at) / 3600.0
+
+
+class CloudProvider:
+    """Node pools + lifecycle.  All state transitions are driven by the
+    simulator popping the events this class pushes."""
+
+    def __init__(self, pools: Iterable[NodePool], seed: int = 0):
+        self.pools: Dict[str, NodePool] = {p.name: p for p in pools}
+        self.nodes: Dict[str, Node] = {}
+        self._ids = itertools.count()
+        self.rng = np.random.default_rng(seed)
+
+    # -- queries -------------------------------------------------------------
+    def nodes_in(self, *states: NodeState) -> List[Node]:
+        return [n for n in self.nodes.values() if n.state in states]
+
+    def up_nodes(self) -> List[Node]:
+        return self.nodes_in(NodeState.UP)
+
+    def pending_slots(self) -> int:
+        """Slots already requested but still booting."""
+        return sum(n.slots for n in self.nodes_in(NodeState.PROVISIONING))
+
+    def pool_census(self, pool_name: str) -> int:
+        """Nodes of a pool that exist or are coming (counts vs. max_nodes)."""
+        return sum(1 for n in self.nodes.values()
+                   if n.pool.name == pool_name and n.state in (
+                       NodeState.PROVISIONING, NodeState.UP,
+                       NodeState.DRAINING))
+
+    def theoretical_max_slots(self) -> int:
+        """Ceiling on total capacity with every pool at max_nodes — a job
+        whose min_replicas exceeds this can never run here."""
+        return sum(p.max_nodes * p.slots_per_node for p in self.pools.values())
+
+    def market_slots(self, market: str) -> int:
+        return sum(n.slots for n in self.nodes.values()
+                   if n.pool.market == market and n.state in (
+                       NodeState.PROVISIONING, NodeState.UP))
+
+    # -- lifecycle -----------------------------------------------------------
+    def bootstrap(self, queue: EventQueue) -> List[Node]:
+        """Instantiate each pool's ``initial_nodes`` as already UP at t=0
+        (the cluster you start the experiment with)."""
+        out = []
+        for pool in self.pools.values():
+            for _ in range(pool.initial_nodes):
+                node = self._new_node(pool, now=0.0, boots=False)
+                node.state = NodeState.UP
+                node.up_at = 0.0
+                if node.kill_at is not None:
+                    queue.push(node.kill_at, "spot_kill", node.node_id)
+                out.append(node)
+        return out
+
+    def request_node(self, pool_name: str, now: float,
+                     queue: EventQueue) -> Optional[Node]:
+        """Ask for one node; returns None when the pool is at max_nodes.
+        Capacity arrives via the "node_up" event after boot_latency."""
+        pool = self.pools[pool_name]
+        if self.pool_census(pool_name) >= pool.max_nodes:
+            return None
+        node = self._new_node(pool, now)
+        queue.push(now + pool.boot_latency, "node_up", node.node_id)
+        if node.kill_at is not None:
+            queue.push(node.kill_at, "spot_kill", node.node_id)
+        return node
+
+    def release_node(self, node_id: str, now: float,
+                     queue: EventQueue) -> Node:
+        """Voluntary decommission.  The caller removes the capacity from the
+        cluster NOW; billing continues through teardown_delay."""
+        node = self.nodes[node_id]
+        assert node.state == NodeState.UP, (node_id, node.state)
+        node.state = NodeState.DRAINING
+        queue.push(now + node.pool.teardown_delay, "node_down", node.node_id)
+        return node
+
+    def on_node_up(self, node_id: str, now: float) -> Optional[Node]:
+        node = self.nodes[node_id]
+        if node.state is not NodeState.PROVISIONING:
+            return None                    # stale (already killed)
+        node.state = NodeState.UP
+        node.up_at = now
+        return node
+
+    def on_node_down(self, node_id: str, now: float) -> Optional[Node]:
+        node = self.nodes[node_id]
+        if node.state is not NodeState.DRAINING:
+            return None                    # stale (spot-killed while draining)
+        node.state = NodeState.DOWN
+        node.billing_ends_at = now
+        return node
+
+    def on_spot_kill(self, node_id: str, now: float
+                     ) -> Tuple[Optional[Node], bool]:
+        """Returns (node, was_offering_capacity).  Stale kills (node already
+        DOWN, or still booting) return (None, False) / end billing quietly."""
+        node = self.nodes[node_id]
+        if node.state is NodeState.PROVISIONING:
+            # killed before it ever booted: it never billed, never served
+            node.state = NodeState.DOWN
+            node.billing_ends_at = None
+            return None, False
+        if node.state is NodeState.DOWN:
+            return None, False
+        was_up = node.state is NodeState.UP
+        node.state = NodeState.DOWN
+        node.billing_ends_at = now
+        return node, was_up
+
+    def inject_spot_kill(self, node_id: str, t: float,
+                         queue: EventQueue) -> None:
+        """Deterministic kill for tests/demos (bypasses the Exp(mean) draw)."""
+        self.nodes[node_id].kill_at = t
+        queue.push(t, "spot_kill", node_id)
+
+    # -- internals -----------------------------------------------------------
+    def _new_node(self, pool: NodePool, now: float,
+                  boots: bool = True) -> Node:
+        node = Node(node_id=f"{pool.name}-{next(self._ids)}", pool=pool,
+                    requested_at=now)
+        if pool.market == SPOT:
+            # the Exp(mean) lifetime clock starts when the node comes UP —
+            # bootstrap nodes (boots=False) are up at ``now`` already
+            up_at = now + (pool.boot_latency if boots else 0.0)
+            node.kill_at = up_at + float(
+                self.rng.exponential(pool.spot_lifetime_mean))
+        self.nodes[node.node_id] = node
+        return node

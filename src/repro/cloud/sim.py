@@ -1,0 +1,211 @@
+"""Discrete-event simulator over a :class:`CloudProvider`: dynamic capacity,
+spot preemption, node autoscaling, and cost accounting.
+
+Extends :class:`repro.core.simulator.Simulator` with four event kinds:
+
+- ``node_up``        capacity attaches; queued jobs get a Fig.-3 offer pass
+- ``node_down``      a drained node's billing stops
+- ``spot_kill``      a spot node vanishes NOW; running jobs above the new
+                     capacity are first shrunk toward min_replicas (lowest
+                     priority first), then checkpoint-to-disk preempted via
+                     the same ``Actions.preempt`` path PreemptingPolicy uses
+                     (victims requeue and later resume with progress intact)
+- ``autoscale_tick`` the NodeAutoscaler evaluates queue pressure / idleness
+
+Cost integration piggybacks on ``_record_util``: every allocation or capacity
+boundary advances the :class:`CostAccountant` under the rates that held since
+the previous boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.cloud.cost import CostAccountant, CostReport
+from repro.cloud.node_autoscaler import NodeAutoscaler
+from repro.cloud.provider import CloudProvider, NodeState
+from repro.core.job import JobSpec, JobStatus
+from repro.core.metrics import ScheduleMetrics
+from repro.core.policies import PolicyConfig
+from repro.core.simulator import Simulator, SimWorkload
+
+
+class CloudSimulator(Simulator):
+    def __init__(self, provider: CloudProvider, policy_cfg: PolicyConfig,
+                 *, autoscaler: Optional[NodeAutoscaler] = None,
+                 policy=None):
+        super().__init__(0, policy_cfg)     # all capacity comes from nodes
+        if policy is not None:
+            self.policy = policy
+        self.provider = provider
+        self.autoscaler = autoscaler
+        self.accountant = CostAccountant()
+        self.cost_report: Optional[CostReport] = None
+        self.spot_victim_jobs = 0           # job preemptions caused by kills
+        self._expected_jobs = 0
+        for node in provider.bootstrap(self.queue):
+            self.cluster.add_node(node.node_id, node.slots)
+            self.accountant.node_up(node)
+        self.util.record_capacity(0.0, self.cluster.total_slots)
+        if autoscaler is not None:
+            self.queue.push(0.0, "autoscale_tick", None)
+
+    # -- bookkeeping hooks ---------------------------------------------------
+    def _record_util(self):
+        # integrate [last boundary, now] under the OLD allocations/rates,
+        # then snapshot the new allocation state
+        self.accountant.advance(self.now)
+        super()._record_util()
+        self.accountant.set_allocations(self.cluster.running_jobs())
+
+    def _record_capacity(self):
+        self.util.record_capacity(self.now, self.cluster.total_slots)
+        self._record_util()
+
+    def _sync_all(self):
+        for j in self.cluster.running_jobs():
+            self._sync_progress(j)
+
+    def _all_done(self) -> bool:
+        jobs = self.cluster.jobs
+        return (len(jobs) >= self._expected_jobs and
+                all(j.status is JobStatus.COMPLETED for j in jobs.values()))
+
+    def _should_stop(self) -> bool:
+        # the experiment window ends at the last completion; don't bill idle
+        # nodes out to their far-future spot fates / teardown events
+        if self._all_done():
+            return True
+        # stuck: every job submitted, nothing running, nothing booting, and
+        # no autoscaler able to make progress — the queued remainder can
+        # never start, so stop instead of billing to the next far-future
+        # event.  With an autoscaler, "able to make progress" means some
+        # queued job fits the pools' theoretical ceiling (the autoscaler can
+        # provision toward it); past max_horizon nothing provisions either.
+        jobs = self.cluster.jobs
+        if (len(jobs) < self._expected_jobs
+                or any(j.status is JobStatus.RUNNING for j in jobs.values())
+                or self.provider.nodes_in(NodeState.PROVISIONING)):
+            return False
+        if self.autoscaler is None:
+            return True
+        if self.now >= self.autoscaler.cfg.max_horizon:
+            return True
+        max_slots = self.provider.theoretical_max_slots()
+        return all(j.spec.min_replicas > max_slots
+                   for j in self.cluster.queued_jobs())
+
+    # -- API -----------------------------------------------------------------
+    def submit(self, spec: JobSpec, workload: SimWorkload):
+        self._expected_jobs += 1
+        super().submit(spec, workload)
+
+    def run(self) -> ScheduleMetrics:
+        metrics = super().run()
+        self.accountant.advance(self.now)
+        self.cost_report = self.accountant.report()
+        r = self.cost_report
+        return dataclasses.replace(
+            metrics, total_cost=r.total_cost, idle_cost=r.idle_cost,
+            node_hours=r.node_hours, spot_preemptions=r.spot_preemptions)
+
+    def decommission(self, node_id: str) -> None:
+        """Voluntarily release an idle node (autoscaler scale-down).  The
+        capacity leaves the scheduler now; billing runs through teardown."""
+        node = self.provider.nodes[node_id]
+        assert self.cluster.free_slots >= node.slots, \
+            "decommission would displace running work"
+        self._record_util()                       # close the interval first
+        self.cluster.remove_node(node_id)
+        self.provider.release_node(node_id, self.now, self.queue)
+        self._record_capacity()
+
+    # -- cloud event kinds ---------------------------------------------------
+    def _handle_event(self, ev) -> None:
+        if ev.kind == "node_up":
+            self._on_node_up(ev.payload)
+        elif ev.kind == "node_down":
+            node = self.provider.on_node_down(ev.payload, self.now)
+            if node is not None:
+                self._record_util()               # integrate, then drop rate
+                self.accountant.node_down(node)
+        elif ev.kind == "spot_kill":
+            self._on_spot_kill(ev.payload)
+        elif ev.kind == "autoscale_tick":
+            self._on_autoscale_tick()
+        else:
+            super()._handle_event(ev)
+
+    def _on_node_up(self, node_id: str) -> None:
+        node = self.provider.on_node_up(node_id, self.now)
+        if node is None:
+            return                                # killed while booting
+        self._record_util()                       # close interval at old rate
+        self.accountant.node_up(node)
+        self.cluster.add_node(node.node_id, node.slots)
+        self._record_capacity()
+        # fresh capacity is a completion-shaped opportunity: run the Fig. 3
+        # redistribution so queued jobs start / running jobs expand
+        self._sync_all()
+        self.policy.on_job_complete(self.cluster, node.slots, self.now,
+                                    self.actions)
+
+    def _on_spot_kill(self, node_id: str) -> None:
+        node, was_up = self.provider.on_spot_kill(node_id, self.now)
+        if node is None:
+            return                                # stale: already gone
+        self._record_util()
+        self.accountant.node_down(node, killed=True)
+        if not was_up:
+            return                                # was draining: billing only
+        self._sync_all()
+        self.cluster.remove_node(node_id)
+        self._record_capacity()
+        deficit = self.cluster.overcommit
+        # 1) shrink elastic victims toward min, lowest priority first (forced:
+        #    the capacity is already gone, so no gap/priority ceremony)
+        if deficit > 0:
+            for j in reversed(self.cluster.running_jobs()):
+                if deficit <= 0:
+                    break
+                target = j.spec.feasible(
+                    max(j.spec.min_replicas, j.replicas - deficit))
+                if target < j.replicas:
+                    freed = j.replicas - target
+                    if self.actions.shrink(j, target):
+                        deficit -= freed
+        # 2) still over: checkpoint-to-disk preemption (same path as
+        #    PreemptingPolicy), lowest priority first
+        if deficit > 0:
+            for j in reversed(self.cluster.running_jobs()):
+                if deficit <= 0:
+                    break
+                deficit -= j.replicas
+                self.actions.preempt(j)
+                self.spot_victim_jobs += 1
+        assert self.cluster.overcommit == 0, "spot eviction failed"
+        # surviving free capacity (shrinks may have overshot node granularity)
+        # goes back through the redistribution pass; pass the real free count
+        # so pseudocode-faithful configs (redistribute_idle=False) see it too
+        free = self.cluster.free_slots
+        if free > 0:
+            self.policy.on_job_complete(self.cluster, free, self.now,
+                                        self.actions)
+
+    def _on_autoscale_tick(self) -> None:
+        if self.autoscaler is None:
+            return
+        self._sync_all()
+        self.autoscaler.evaluate(self, self.now)
+        # CLUES-style periodic queue re-examination: offer free capacity to
+        # queued jobs that earlier passes skipped (e.g. a rescale-gap
+        # cooldown that has since expired) — without this, a startable job
+        # could wait forever if no completion/node event comes
+        free = self.cluster.free_slots
+        if free > 0 and self.cluster.queued_jobs():
+            self.policy.on_job_complete(self.cluster, free, self.now,
+                                        self.actions)
+        if (not self._all_done()
+                and self.now < self.autoscaler.cfg.max_horizon):
+            self.queue.push(self.now + self.autoscaler.cfg.tick_interval,
+                            "autoscale_tick", None)

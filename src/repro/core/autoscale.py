@@ -105,5 +105,7 @@ class PreemptingPolicy(ElasticPolicy):
         for v in victims:
             act.preempt(v)
         free = self._avail(cluster)
-        if free >= job.spec.min_replicas:
-            act.create(job, min(free, job.spec.max_replicas))
+        replicas = job.spec.feasible(min(free, job.spec.max_replicas))
+        if replicas >= job.spec.min_replicas:
+            act.create(job, replicas)
+            # on failure the job simply stays QUEUED for redistribution

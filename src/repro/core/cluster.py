@@ -4,6 +4,12 @@ A *slot* is the malleability quantum: one worker replica (paper: one pod/PE;
 here: one model-parallel device group — DESIGN.md §2).  The live operator
 additionally tracks which concrete JAX devices back each slot; the simulator
 only counts.
+
+Capacity is *dynamic*: beyond the fixed base slots given at construction, the
+cloud layer (repro.cloud) attaches and detaches whole nodes via
+:meth:`add_node` / :meth:`remove_node`.  A spot preemption may remove a node
+out from under running jobs, so ``free_slots`` can transiently go negative;
+``overcommit`` exposes the deficit the caller must resolve (shrink/preempt).
 """
 from __future__ import annotations
 
@@ -15,7 +21,8 @@ from repro.core.job import JobState, JobStatus
 class Cluster:
     def __init__(self, total_slots: int, devices: Optional[Sequence] = None,
                  devices_per_slot: int = 1):
-        self.total_slots = total_slots
+        self._base_slots = total_slots
+        self._node_slots: Dict[str, int] = {}    # dynamic capacity by node
         self.jobs: Dict[str, JobState] = {}
         self.devices = list(devices) if devices is not None else None
         self.devices_per_slot = devices_per_slot
@@ -26,6 +33,10 @@ class Cluster:
 
     # --- accounting -------------------------------------------------------
     @property
+    def total_slots(self) -> int:
+        return self._base_slots + sum(self._node_slots.values())
+
+    @property
     def used_slots(self) -> int:
         return sum(j.replicas for j in self.jobs.values()
                    if j.status == JobStatus.RUNNING)
@@ -33,6 +44,35 @@ class Cluster:
     @property
     def free_slots(self) -> int:
         return self.total_slots - self.used_slots
+
+    @property
+    def overcommit(self) -> int:
+        """Slots running beyond capacity (after a node was yanked)."""
+        return max(0, self.used_slots - self.total_slots)
+
+    # --- dynamic capacity (cloud node lifecycle) ---------------------------
+    def add_node(self, node_id: str, slots: int) -> None:
+        assert node_id not in self._node_slots, node_id
+        assert self.devices is None, \
+            "dynamic nodes are unsupported on a device-backed cluster"
+        self._node_slots[node_id] = slots
+        self._slot_owner.extend([None] * slots)
+
+    def remove_node(self, node_id: str) -> int:
+        """Detach a node's slots.  Only unallocated slot indices are retired,
+        so the caller must evict or shrink victims first when the live slot
+        map is in use (the counting simulator never allocates indices)."""
+        slots = self._node_slots.pop(node_id)
+        retired = 0
+        for i in range(len(self._slot_owner) - 1, -1, -1):
+            if retired == slots:
+                break
+            if self._slot_owner[i] is None:
+                del self._slot_owner[i]
+                retired += 1
+        assert retired == slots, \
+            f"remove_node({node_id}): only {retired}/{slots} slots free"
+        return slots
 
     def add_job(self, job: JobState):
         assert job.job_id not in self.jobs, job.job_id

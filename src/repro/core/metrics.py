@@ -1,9 +1,12 @@
 """Scheduler evaluation metrics (paper §4.3).
 
 - total time: first submission -> last completion
-- cluster utilization: time-averaged used/total slots over that window
+- cluster utilization: time-averaged used/total slots over that window; with
+  a dynamic (cloud) cluster the denominator is the time-varying *provisioned*
+  capacity, recorded via :meth:`UtilizationLog.record_capacity`
 - weighted mean response time: sum(priority * (start - submit)) / sum(priority)
 - weighted mean completion time: same with (end - submit)
+- cost fields (cloud runs only): node-hours x pool price, wasted-idle dollars
 """
 from __future__ import annotations
 
@@ -13,10 +16,34 @@ from typing import Dict, List, Sequence, Tuple
 from repro.core.job import JobState, completion_time, response_time
 
 
+def _integrate(events: Sequence[Tuple[float, float]], t0: float, t1: float,
+               initial: float) -> float:
+    """Area under a piecewise-constant step series over [t0, t1].  The value
+    before the first event (and at t <= t0) is the last event at or before
+    t0, else ``initial``."""
+    area = 0.0
+    cur = initial
+    prev = t0
+    for t, u in events:
+        if t <= t0:
+            cur = u
+            continue
+        tc = min(t, t1)
+        area += cur * max(0.0, tc - prev)
+        prev = max(prev, tc)
+        cur = u
+        if t >= t1:
+            break
+    area += cur * max(0.0, t1 - prev)
+    return area
+
+
 @dataclass
 class UtilizationLog:
     total_slots: int
     events: List[Tuple[float, int]] = field(default_factory=list)  # (t, used)
+    # (t, provisioned slots); empty = capacity fixed at total_slots
+    capacity_events: List[Tuple[float, int]] = field(default_factory=list)
 
     def record(self, t: float, used: int):
         if self.events and self.events[-1][0] == t:
@@ -24,24 +51,22 @@ class UtilizationLog:
         else:
             self.events.append((t, used))
 
+    def record_capacity(self, t: float, total: int):
+        if self.capacity_events and self.capacity_events[-1][0] == t:
+            self.capacity_events[-1] = (t, total)
+        else:
+            self.capacity_events.append((t, total))
+
     def average(self, t0: float, t1: float) -> float:
         if t1 <= t0 or not self.events:
             return 0.0
-        area = 0.0
-        used = 0
-        prev = t0
-        for t, u in self.events:
-            if t <= t0:
-                used = u
-                continue
-            tc = min(t, t1)
-            area += used * max(0.0, tc - prev)
-            prev = max(prev, tc)
-            used = u
-            if t >= t1:
-                break
-        area += used * max(0.0, t1 - prev)
-        return area / (self.total_slots * (t1 - t0))
+        used = _integrate(self.events, t0, t1, 0)
+        if self.capacity_events:
+            cap = _integrate(self.capacity_events, t0, t1,
+                             float(self.total_slots))
+        else:
+            cap = self.total_slots * (t1 - t0)
+        return used / cap if cap > 0 else 0.0
 
     def profile(self) -> List[Tuple[float, int]]:
         return list(self.events)
@@ -55,16 +80,28 @@ class ScheduleMetrics:
     weighted_mean_completion: float
     rescale_count: int
     dropped_jobs: int = 0
+    # cloud runs (repro.cloud) — zero on fixed-capacity simulations
+    total_cost: float = 0.0        # $ billed across all provisioned nodes
+    idle_cost: float = 0.0         # $ of provisioned-but-unused slot time
+    node_hours: float = 0.0        # billed node-hours
+    spot_preemptions: int = 0      # nodes reclaimed by the spot market
 
     def row(self) -> str:
-        return (f"total={self.total_time:9.1f}s util={self.utilization:6.2%} "
-                f"resp={self.weighted_mean_response:8.2f}s "
-                f"compl={self.weighted_mean_completion:8.2f}s "
-                f"rescales={self.rescale_count}")
+        s = (f"total={self.total_time:9.1f}s util={self.utilization:6.2%} "
+             f"resp={self.weighted_mean_response:8.2f}s "
+             f"compl={self.weighted_mean_completion:8.2f}s "
+             f"rescales={self.rescale_count}")
+        if self.total_cost > 0.0:
+            s += (f" cost=${self.total_cost:7.3f} idle=${self.idle_cost:6.3f}"
+                  f" node_h={self.node_hours:5.2f}"
+                  f" spot_kills={self.spot_preemptions}")
+        return s
 
 
 def compute_metrics(jobs: Sequence[JobState], util: UtilizationLog
                     ) -> ScheduleMetrics:
+    """Cost fields stay at their zero defaults here; CloudSimulator.run()
+    fills them from its CostReport via dataclasses.replace."""
     done = [j for j in jobs if j.end_time is not None]
     submits = [j.spec.submit_time for j in jobs]
     t0 = min(submits) if submits else 0.0

@@ -96,7 +96,8 @@ class ElasticPolicy:
             # start immediately; never shrink anyone if min fits (paper §3.2.1:
             # "run the higher priority job at its minimum replicas
             #  configuration to avoid a shrink call")
-            act.create(job, replicas)
+            if not act.create(job, replicas):
+                act.enqueue(job)    # capacity shrank under us (spot kill)
             return
 
         # dry pass: could shrinking strictly-lower/equal-priority running jobs
@@ -138,7 +139,9 @@ class ElasticPolicy:
             act.enqueue(job)    # raced a cool-down; shouldn't normally happen
             return
         free = self._avail(cluster)
-        act.create(job, spec.feasible(min(free, spec.max_replicas)))
+        replicas = spec.feasible(min(free, spec.max_replicas))
+        if replicas < spec.min_replicas or not act.create(job, replicas):
+            act.enqueue(job)
 
     # -- Figure 3: a job completed -------------------------------------------
     def on_job_complete(self, cluster: Cluster, freed_slots: int, now: float,

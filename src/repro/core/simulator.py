@@ -45,7 +45,10 @@ class _SimActions:
     # shrink/expand on rigid jobs because min == max.
     def create(self, job: JobState, replicas: int) -> bool:
         sim = self.sim
-        assert replicas <= sim.cluster.free_slots, "over-allocation"
+        # capacity can shrink under a running policy (spot kill between the
+        # policy's free_slots read and this call) — refuse, don't crash
+        if replicas <= 0 or replicas > sim.cluster.free_slots:
+            return False
         job.status = JobStatus.RUNNING
         job.replicas = replicas
         job.last_action = sim.now
@@ -73,7 +76,10 @@ class _SimActions:
         if replicas == job.replicas:
             return True
         delta = replicas - job.replicas
-        if delta > sim.cluster.free_slots:
+        # shrinks always succeed — even when free_slots is negative because a
+        # node was yanked (the cloud layer shrinks victims to resolve exactly
+        # that deficit)
+        if delta > 0 and delta > sim.cluster.free_slots:
             return False
         sim._sync_progress(job)
         wl = sim.workloads[job.job_id]
@@ -101,7 +107,10 @@ class _SimActions:
         job.replicas = 0
         job.version += 1            # invalidate its completion event
         job.preempt_count += 1
-        job.last_action = sim.now
+        # queued jobs must always pass the rescale-gap check (job.py: Fig. 3
+        # hands slots to queued jobs regardless of recency) — anchoring
+        # last_action here would strand the victim for a whole gap window
+        job.last_action = -math.inf
         sim._record_util()
         return True
 
@@ -148,6 +157,8 @@ class Simulator:
 
     def run(self) -> ScheduleMetrics:
         while len(self.queue):
+            if self._should_stop():
+                break
             ev = self.queue.pop()
             self.now = max(self.now, ev.time)
             if ev.kind == "submit":
@@ -176,7 +187,20 @@ class Simulator:
                     self._sync_progress(j)
                 self.policy.on_job_complete(self.cluster, freed, self.now,
                                             self.actions)
+            else:
+                # extension point: repro.cloud adds node_up / node_down /
+                # spot_kill / autoscale_tick event kinds
+                self._handle_event(ev)
         return compute_metrics(list(self.cluster.jobs.values()), self.util)
+
+    def _handle_event(self, ev) -> None:
+        raise ValueError(f"unknown event kind {ev.kind!r}")
+
+    def _should_stop(self) -> bool:
+        """Extension hook: lets subclasses end the run before the queue
+        drains (cloud sims carry perpetual node-lifecycle events that would
+        otherwise bill idle nodes out to their far-future spot fates)."""
+        return False
 
 
 # ---------------------------------------------------------------------------
@@ -196,11 +220,13 @@ def jacobi_workload(size: str) -> SimWorkload:
     )
 
 
-def make_jacobi_jobs(seed: int, n_jobs: int = 16, submission_gap: float = 90.0
-                     ) -> List[JobSpec]:
-    """16 jobs drawn from the 4 sizes with priorities U{1..5} (paper)."""
+def make_jacobi_jobs(seed: int, n_jobs: int = 16, submission_gap: float = 90.0,
+                     sizes: Optional[Sequence[str]] = None) -> List[JobSpec]:
+    """16 jobs drawn from the 4 sizes with priorities U{1..5} (paper).
+    ``sizes`` restricts the mix (e.g. ("small", "medium") for the cloud-cost
+    benchmark, where jobs must not absorb arbitrary capacity)."""
     rng = np.random.default_rng(seed)
-    sizes = list(JACOBI_SIZES)
+    sizes = list(sizes) if sizes is not None else list(JACOBI_SIZES)
     specs = []
     for i in range(n_jobs):
         size = sizes[int(rng.integers(len(sizes)))]

@@ -1,0 +1,117 @@
+"""Edge cases for UtilizationLog.average windows and EventQueue ordering —
+the two primitives every simulation result rests on."""
+import pytest
+
+from repro.core.events import EventQueue
+from repro.core.metrics import UtilizationLog
+
+
+# ---------------------------------------------------------------------------
+# UtilizationLog.average window semantics
+# ---------------------------------------------------------------------------
+
+def test_average_empty_log_is_zero():
+    u = UtilizationLog(8)
+    assert u.average(0.0, 100.0) == 0.0
+
+
+def test_average_degenerate_window_is_zero():
+    u = UtilizationLog(8)
+    u.record(0.0, 4)
+    assert u.average(10.0, 10.0) == 0.0
+    assert u.average(10.0, 5.0) == 0.0
+
+
+def test_average_event_before_window_sets_initial_level():
+    u = UtilizationLog(8)
+    u.record(0.0, 4)                     # level 4 long before the window
+    assert u.average(100.0, 200.0) == pytest.approx(0.5)
+
+
+def test_average_event_exactly_at_window_start():
+    u = UtilizationLog(8)
+    u.record(50.0, 8)                    # t == t0: counts as the level AT t0
+    assert u.average(50.0, 100.0) == pytest.approx(1.0)
+
+
+def test_average_event_exactly_at_window_end():
+    u = UtilizationLog(8)
+    u.record(0.0, 4)
+    u.record(100.0, 8)                   # t == t1: contributes zero width
+    assert u.average(0.0, 100.0) == pytest.approx(0.5)
+
+
+def test_average_event_after_window_ignored():
+    u = UtilizationLog(8)
+    u.record(0.0, 4)
+    u.record(150.0, 8)
+    assert u.average(0.0, 100.0) == pytest.approx(0.5)
+
+
+def test_average_piecewise_mixture():
+    u = UtilizationLog(10)
+    u.record(0.0, 0)
+    u.record(10.0, 10)                   # [10, 20): full
+    u.record(20.0, 5)                    # [20, 40): half
+    # (0*10 + 10*10 + 5*20) / (10*40)
+    assert u.average(0.0, 40.0) == pytest.approx(0.5)
+
+
+def test_average_same_timestamp_record_overwrites():
+    u = UtilizationLog(8)
+    u.record(0.0, 2)
+    u.record(0.0, 8)                     # same t: last write wins, no dup
+    assert len(u.events) == 1
+    assert u.average(0.0, 10.0) == pytest.approx(1.0)
+
+
+def test_average_with_dynamic_capacity_denominator():
+    u = UtilizationLog(8)                # 8 slots before any capacity event
+    u.record(0.0, 8)
+    u.record_capacity(50.0, 24)          # cluster tripled mid-window
+    # used: 8 for 100 s = 800; capacity: 8*50 + 24*50 = 1600
+    assert u.average(0.0, 100.0) == pytest.approx(0.5)
+
+
+def test_average_capacity_zero_window_safe():
+    u = UtilizationLog(0)                # cloud sims start with zero base
+    u.record(0.0, 0)
+    assert u.average(0.0, 10.0) == 0.0   # no division by zero
+
+
+# ---------------------------------------------------------------------------
+# EventQueue determinism
+# ---------------------------------------------------------------------------
+
+def test_event_queue_same_timestamp_is_fifo():
+    q = EventQueue()
+    for i in range(50):
+        q.push(10.0, "k", i)
+    assert [q.pop().payload for _ in range(50)] == list(range(50))
+
+
+def test_event_queue_time_then_insertion_order():
+    q = EventQueue()
+    q.push(5.0, "a", "late-but-first-pushed")
+    q.push(1.0, "b", "early")
+    q.push(5.0, "c", "late-second-pushed")
+    q.push(0.5, "d", "earliest")
+    order = [(q.pop().kind) for _ in range(4)]
+    assert order == ["d", "b", "a", "c"]
+
+
+def test_event_queue_pop_empty_returns_none():
+    q = EventQueue()
+    assert q.pop() is None
+    assert q.peek_time() is None
+    assert len(q) == 0
+
+
+def test_event_queue_interleaved_push_pop_stays_deterministic():
+    q = EventQueue()
+    q.push(2.0, "x", 1)
+    q.push(2.0, "x", 2)
+    assert q.pop().payload == 1
+    q.push(2.0, "x", 3)                  # same timestamp, pushed after a pop
+    assert [q.pop().payload, q.pop().payload] == [2, 3]
+    assert q.peek_time() is None

@@ -2,6 +2,11 @@
 invariants must hold for ANY workload, policy variant, and gap."""
 import math
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.job import JobSpec, JobStatus
