@@ -15,6 +15,7 @@ MODULES = [
     ("fig8", "benchmarks.fig8_rescale_gap"),
     ("table1", "benchmarks.table1_policies"),
     ("table2", "benchmarks.table2_cloud_cost"),
+    ("table3", "benchmarks.table3_placement"),
     ("roofline", "benchmarks.roofline"),
 ]
 

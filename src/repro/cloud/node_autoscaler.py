@@ -13,7 +13,12 @@ Scale-up:   unmet demand = queued min_replicas + headroom - free - booting.
 Scale-down: only after the cluster has been continuously idle enough to free
             a whole node for ``idle_timeout`` s AND ``scale_down_cooldown``
             has passed since the last release (hysteresis against thrash).
-            The most expensive removable node goes first.
+            Drain-aware: the victim is the node with the FEWEST resident
+            slots whose residents fit on free capacity elsewhere (ties break
+            toward the most expensive node); residents are migrated off via
+            :meth:`CloudSimulator.begin_drain`, retried every tick until the
+            node empties (migrate-or-wait), and the drain is cancelled if
+            queue pressure returns.
 """
 from __future__ import annotations
 
@@ -52,6 +57,7 @@ class NodeAutoscaler:
         self._last_up = -math.inf
         self._last_down = -math.inf
         self._idle_since: Optional[float] = None
+        self._draining: Optional[str] = None     # node mid-drain (cordoned)
         self.scale_ups = 0
         self.scale_downs = 0
 
@@ -64,10 +70,31 @@ class NodeAutoscaler:
         # pools could EVER provide must not trigger provisioning (it would
         # thrash provision/release cycles forever)
         max_slots = self.provider.theoretical_max_slots()
-        demand = (sum(j.spec.min_replicas for j in queued
-                      if j.spec.min_replicas <= max_slots)
-                  + self.cfg.headroom_slots
-                  - max(0, cluster.free_slots) - pending)
+
+        def _demand() -> int:
+            return (sum(j.spec.min_replicas for j in queued
+                        if j.spec.min_replicas <= max_slots)
+                    + self.cfg.headroom_slots
+                    - max(0, cluster.free_slots) - pending)
+        demand = _demand()
+        if self._draining is not None:
+            if self._draining not in cluster.nodes():
+                self._draining = None     # spot market removed it mid-drain:
+                #                           not a voluntary scale-down
+            elif demand > 0:
+                # pressure returned mid-drain: put the capacity back; the
+                # restored free slots may satisfy the demand outright, so
+                # recompute before the scale-up logic below sees it
+                sim.cancel_drain(self._draining)
+                self._draining = None
+                demand = _demand()
+            elif sim.begin_drain(self._draining):     # migrate-or-wait
+                self._draining = None
+                self._last_down = now
+                self.scale_downs += 1
+                return
+            else:
+                return                                # keep waiting
         stranded = False
         if demand > 0:
             if now - self._last_up < self.cfg.scale_up_cooldown:
@@ -97,10 +124,14 @@ class NodeAutoscaler:
             return
         if (now - self._idle_since >= self.cfg.idle_timeout
                 and now - self._last_down >= self.cfg.scale_down_cooldown):
-            sim.decommission(victim.node_id)
-            self._last_down = now
             self._idle_since = None     # restart the idle clock
-            self.scale_downs += 1
+            if sim.begin_drain(victim.node_id):
+                self._last_down = now
+                self.scale_downs += 1
+            else:
+                # residents could not all migrate this tick: keep the node
+                # cordoned and retry next tick (migrate-or-wait)
+                self._draining = victim.node_id
 
     # -- scale-up ------------------------------------------------------------
     #: every held node is assumed to bill at least this many hours in total
@@ -151,12 +182,22 @@ class NodeAutoscaler:
 
     # -- scale-down ----------------------------------------------------------
     def _removable(self, cluster) -> Optional[Node]:
-        """A node whose whole slot count fits in the current idle surplus, so
-        releasing it displaces no running work.  Most expensive first."""
+        """The min-residency node whose residents (if any) fit on free
+        capacity elsewhere, so a drain can empty it without displacing work
+        below min_replicas.  Ties break toward the most expensive node."""
         surplus = cluster.free_slots - self.cfg.headroom_slots
-        candidates = [n for n in self.provider.up_nodes()
-                      if n.slots <= surplus]
+        candidates = []
+        for n in self.provider.up_nodes():
+            if n.node_id not in cluster.nodes() or \
+                    cluster.is_cordoned(n.node_id):
+                continue
+            resident = cluster.resident_count(n.node_id)
+            node_free = n.slots - resident
+            # removing the node takes its own free slots with it; the
+            # residents then need `resident` slots on OTHER nodes
+            if surplus - node_free >= resident:
+                candidates.append((resident, -n.pool.price_per_slot_hour,
+                                   n.node_id, n))
         if not candidates:
             return None
-        return max(candidates, key=lambda n: (n.pool.price_per_slot_hour,
-                                              n.node_id))
+        return min(candidates)[3]

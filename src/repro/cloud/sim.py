@@ -5,12 +5,20 @@ Extends :class:`repro.core.simulator.Simulator` with four event kinds:
 
 - ``node_up``        capacity attaches; queued jobs get a Fig.-3 offer pass
 - ``node_down``      a drained node's billing stops
-- ``spot_kill``      a spot node vanishes NOW; running jobs above the new
-                     capacity are first shrunk toward min_replicas (lowest
-                     priority first), then checkpoint-to-disk preempted via
-                     the same ``Actions.preempt`` path PreemptingPolicy uses
-                     (victims requeue and later resume with progress intact)
+- ``spot_kill``      a spot node vanishes NOW; placement makes the blast set
+                     exact: only the jobs RESIDENT on the killed node are
+                     displaced — their workers migrate to free slots
+                     elsewhere when any exist, else shrink toward
+                     min_replicas (lowest priority first), else checkpoint-
+                     to-disk preempt via the same ``Actions.preempt`` path
+                     PreemptingPolicy uses (victims requeue and later resume
+                     with progress intact)
 - ``autoscale_tick`` the NodeAutoscaler evaluates queue pressure / idleness
+
+Scale-down is drain-aware: :meth:`CloudSimulator.begin_drain` cordons a node,
+migrates its residents onto free capacity elsewhere (each migrated job pays a
+footprint-scaled rescale overhead), and decommissions once empty; the
+autoscaler retries the drain every tick until it completes (migrate-or-wait).
 
 Cost integration piggybacks on ``_record_util``: every allocation or capacity
 boundary advances the :class:`CostAccountant` under the rates that held since
@@ -19,7 +27,7 @@ the previous boundary.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.cloud.cost import CostAccountant, CostReport
 from repro.cloud.node_autoscaler import NodeAutoscaler
@@ -33,8 +41,10 @@ from repro.core.simulator import Simulator, SimWorkload
 class CloudSimulator(Simulator):
     def __init__(self, provider: CloudProvider, policy_cfg: PolicyConfig,
                  *, autoscaler: Optional[NodeAutoscaler] = None,
-                 policy=None):
-        super().__init__(0, policy_cfg)     # all capacity comes from nodes
+                 policy=None, placement: str = "pack"):
+        # all capacity comes from nodes; `placement` picks the slot->node
+        # strategy (pack: low fragmentation; spread: small kill blast radius)
+        super().__init__(0, policy_cfg, placement=placement)
         if policy is not None:
             self.policy = policy
         self.provider = provider
@@ -42,6 +52,9 @@ class CloudSimulator(Simulator):
         self.accountant = CostAccountant()
         self.cost_report: Optional[CostReport] = None
         self.spot_victim_jobs = 0           # job preemptions caused by kills
+        self.migrations = 0                 # jobs relocated off dying nodes
+        # per effective kill: (jobs displaced, slots displaced, preemptions)
+        self.kill_blasts: List[Tuple[int, int, int]] = []
         self._expected_jobs = 0
         for node in provider.bootstrap(self.queue):
             self.cluster.add_node(node.node_id, node.slots)
@@ -105,20 +118,81 @@ class CloudSimulator(Simulator):
         self.accountant.advance(self.now)
         self.cost_report = self.accountant.report()
         r = self.cost_report
+        kills = self.kill_blasts
+        if kills:
+            n = float(len(kills))
+            blast_jobs = sum(k[0] for k in kills) / n
+            # damage concentration: displaced slots per victim job, averaged
+            # over kills (kills that hit an empty node contribute 0)
+            blast_radius = sum(k[1] / k[0] for k in kills if k[0]) / n
+            preempts = sum(k[2] for k in kills) / n
+        else:
+            blast_jobs = blast_radius = preempts = 0.0
         return dataclasses.replace(
             metrics, total_cost=r.total_cost, idle_cost=r.idle_cost,
-            node_hours=r.node_hours, spot_preemptions=r.spot_preemptions)
+            node_hours=r.node_hours, spot_preemptions=r.spot_preemptions,
+            kill_blast_jobs=blast_jobs, kill_blast_radius=blast_radius,
+            kill_preemptions=preempts)
 
-    def decommission(self, node_id: str) -> None:
-        """Voluntarily release an idle node (autoscaler scale-down).  The
-        capacity leaves the scheduler now; billing runs through teardown."""
-        node = self.provider.nodes[node_id]
-        assert self.cluster.free_slots >= node.slots, \
-            "decommission would displace running work"
+    def decommission(self, node_id: str) -> bool:
+        """Voluntarily release an EMPTY node (autoscaler scale-down).  The
+        capacity leaves the scheduler now; billing runs through teardown.
+        Drain-aware guard: returns False while jobs are still resident
+        (callers drain via :meth:`begin_drain`) instead of crashing."""
+        if self.cluster.residents(node_id):
+            return False
         self._record_util()                       # close the interval first
         self.cluster.remove_node(node_id)
         self.provider.release_node(node_id, self.now, self.queue)
         self._record_capacity()
+        return True
+
+    # -- drain (graceful scale-down) -----------------------------------------
+    def begin_drain(self, node_id: str) -> bool:
+        """Cordon a node and try to empty it by migrating residents onto free
+        slots elsewhere; decommission once empty.  Returns True when the node
+        was released, False while residents remain (caller retries next tick
+        — migrate-or-wait)."""
+        if node_id not in self.cluster.nodes():
+            return True                           # spot market beat us to it
+        if not self.cluster.is_cordoned(node_id):
+            self._record_util()
+            self.cluster.cordon(node_id)
+            self._record_capacity()               # capacity leaves now
+        self._sync_all()
+        residents = self.cluster.residents(node_id)
+        for job_id in sorted(residents,
+                             key=lambda i: self.cluster.jobs[i].sort_key()):
+            self._migrate_job(self.cluster.jobs[job_id], node_id)
+        return self.decommission(node_id)
+
+    def cancel_drain(self, node_id: str) -> None:
+        """Queue pressure returned mid-drain: put the capacity back."""
+        if self.cluster.is_cordoned(node_id):
+            self._record_util()
+            self.cluster.uncordon(node_id)
+            self._record_capacity()
+
+    def _migrate_job(self, job, node_id: str) -> int:
+        """Relocate a running job's workers off ``node_id`` onto free slots
+        elsewhere.  The moved workers checkpoint/restart on their new homes:
+        the job pays the rescale-model overhead scaled by the fraction of its
+        replicas that moved."""
+        if job.status is not JobStatus.RUNNING or job.replicas <= 0:
+            return 0
+        moved = self.cluster.migrate(job.job_id, node_id)
+        if moved:
+            self._sync_progress(job)
+            wl = self.workloads[job.job_id]
+            overhead = (wl.rescale.total(job.replicas, job.replicas,
+                                         wl.data_bytes)
+                        * moved / job.replicas)
+            job.overhead_until = max(self.now, job.overhead_until) + overhead
+            self.total_overhead += overhead
+            self.migrations += 1
+            self._schedule_completion(job)
+            self._record_util()
+        return moved
 
     # -- cloud event kinds ---------------------------------------------------
     def _handle_event(self, ev) -> None:
@@ -159,31 +233,54 @@ class CloudSimulator(Simulator):
         if not was_up:
             return                                # was draining: billing only
         self._sync_all()
-        self.cluster.remove_node(node_id)
+        # placement makes the blast set exact: ONLY the jobs resident on the
+        # killed node are displaced (paper: the operator loses specific pods
+        # on a specific node), never arbitrary victims elsewhere
+        victims = dict(self.cluster.residents(node_id))
+        # residents parked on OTHER cordoned nodes (an in-flight drain) are
+        # that drain's deficit, not this kill's: the postcondition is that
+        # the kill adds nothing to it
+        pre_overcommit = self.cluster.overcommit
+        self.cluster.cordon(node_id)              # capacity is gone NOW
         self._record_capacity()
-        deficit = self.cluster.overcommit
-        # 1) shrink elastic victims toward min, lowest priority first (forced:
-        #    the capacity is already gone, so no gap/priority ceremony)
-        if deficit > 0:
-            for j in reversed(self.cluster.running_jobs()):
-                if deficit <= 0:
-                    break
-                target = j.spec.feasible(
-                    max(j.spec.min_replicas, j.replicas - deficit))
-                if target < j.replicas:
-                    freed = j.replicas - target
-                    if self.actions.shrink(j, target):
-                        deficit -= freed
-        # 2) still over: checkpoint-to-disk preemption (same path as
+        by_prio = sorted((self.cluster.jobs[v] for v in victims),
+                         key=lambda j: j.sort_key())
+        # 1) migrate: free slots elsewhere absorb displaced workers (highest
+        #    priority first gets the scarce free capacity)
+        for j in by_prio:
+            self._migrate_job(j, node_id)
+        # 2) shrink still-resident elastic victims toward min, lowest
+        #    priority first (forced: the capacity is already gone, so no
+        #    gap/priority ceremony); placement.evict vacates the cordoned
+        #    node first, so the shrink comes off the dying node exactly
+        self._evict_prefer = node_id
+        try:
+            for j in reversed(by_prio):
+                still = self.cluster.residents(node_id).get(j.job_id, 0)
+                if still and j.status is JobStatus.RUNNING:
+                    target = j.spec.feasible(
+                        max(j.spec.min_replicas, j.replicas - still))
+                    # only a shrink that clears the job OFF the node helps;
+                    # a partial one pays rescale overhead and the job gets
+                    # checkpoint-preempted in step 3 regardless
+                    if target < j.replicas and target <= j.replicas - still:
+                        self.actions.shrink(j, target)
+        finally:
+            self._evict_prefer = None
+        # 3) still resident: checkpoint-to-disk preemption (same path as
         #    PreemptingPolicy), lowest priority first
-        if deficit > 0:
-            for j in reversed(self.cluster.running_jobs()):
-                if deficit <= 0:
-                    break
-                deficit -= j.replicas
+        preempted = 0
+        for j in reversed(by_prio):
+            if self.cluster.residents(node_id).get(j.job_id, 0):
                 self.actions.preempt(j)
                 self.spot_victim_jobs += 1
-        assert self.cluster.overcommit == 0, "spot eviction failed"
+                preempted += 1
+        assert not self.cluster.residents(node_id), "spot eviction failed"
+        self.cluster.remove_node(node_id)
+        assert self.cluster.overcommit <= pre_overcommit, \
+            "spot eviction failed"
+        self.kill_blasts.append(
+            (len(victims), sum(victims.values()), preempted))
         # surviving free capacity (shrinks may have overshot node granularity)
         # goes back through the redistribution pass; pass the real free count
         # so pseudocode-faithful configs (redistribute_idle=False) see it too

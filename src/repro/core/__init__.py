@@ -13,6 +13,7 @@ from repro.core.elastic import ElasticTrainer, RescaleTimings, TrainJobConfig
 from repro.core.job import JobSpec, JobState, JobStatus
 from repro.core.metrics import ScheduleMetrics, UtilizationLog, compute_metrics
 from repro.core.operator import ElasticClusterController
+from repro.core.placement import PlacementError, PlacementMap
 from repro.core.policies import Actions, ElasticPolicy, PolicyConfig
 from repro.core.simulator import (Simulator, SimWorkload, VARIANTS,
                                   jacobi_workload, make_jacobi_jobs,
@@ -22,7 +23,8 @@ __all__ = [
     "AgingPolicy", "CostBenefitPolicy", "PreemptingPolicy", "Cluster",
     "ElasticTrainer", "RescaleTimings", "TrainJobConfig", "JobSpec",
     "JobState", "JobStatus", "ScheduleMetrics", "UtilizationLog",
-    "compute_metrics", "ElasticClusterController", "Actions", "ElasticPolicy",
+    "compute_metrics", "ElasticClusterController", "PlacementError",
+    "PlacementMap", "Actions", "ElasticPolicy",
     "PolicyConfig", "Simulator", "SimWorkload", "VARIANTS", "jacobi_workload",
     "make_jacobi_jobs", "run_variant",
 ]

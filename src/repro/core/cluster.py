@@ -1,40 +1,59 @@
-"""Cluster slot accounting + device-range allocation.
+"""Cluster slot accounting + node-aware slot allocation.
 
 A *slot* is the malleability quantum: one worker replica (paper: one pod/PE;
-here: one model-parallel device group — DESIGN.md §2).  The live operator
-additionally tracks which concrete JAX devices back each slot; the simulator
-only counts.
+here: one model-parallel device group — DESIGN.md §2).  Every slot belongs to
+a concrete node via :class:`~repro.core.placement.PlacementMap`, so kills and
+drains displace the jobs actually resident on a node (paper: the operator
+kills/drains specific pods on specific nodes), not "some" victims.
 
-Capacity is *dynamic*: beyond the fixed base slots given at construction, the
-cloud layer (repro.cloud) attaches and detaches whole nodes via
-:meth:`add_node` / :meth:`remove_node`.  A spot preemption may remove a node
-out from under running jobs, so ``free_slots`` can transiently go negative;
-``overcommit`` exposes the deficit the caller must resolve (shrink/preempt).
+Base capacity given at construction becomes one node (``base``) or, with
+``slots_per_node``, a row of ``base00..``; the cloud layer (repro.cloud)
+attaches and detaches whole nodes via :meth:`add_node` / :meth:`remove_node`.
+A spot preemption cordons a node out from under running jobs, so
+``free_slots`` can transiently go negative; ``overcommit`` exposes the
+deficit the caller must resolve (migrate/shrink/preempt).
+
+Counting (``total/used/free_slots``) stays derived from job replica counts;
+the placement map is the concrete slot->node assignment backing it.  The two
+agree whenever every replica change goes through :meth:`place`/:meth:`evict`
+(property-tested: residency sums equal ``used_slots``).
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.job import JobState, JobStatus
+from repro.core.placement import PlacementError, PlacementMap
 
 
 class Cluster:
     def __init__(self, total_slots: int, devices: Optional[Sequence] = None,
-                 devices_per_slot: int = 1):
-        self._base_slots = total_slots
-        self._node_slots: Dict[str, int] = {}    # dynamic capacity by node
+                 devices_per_slot: int = 1, *,
+                 slots_per_node: Optional[int] = None,
+                 placement: str = "pack"):
         self.jobs: Dict[str, JobState] = {}
         self.devices = list(devices) if devices is not None else None
         self.devices_per_slot = devices_per_slot
         if self.devices is not None:
             assert len(self.devices) >= total_slots * devices_per_slot
-        # slot index -> job_id (None = free); contiguous ranges preferred
-        self._slot_owner: List[Optional[str]] = [None] * total_slots
+        self.placement = PlacementMap(strategy=placement)
+        if total_slots > 0:
+            if slots_per_node is None:
+                self.placement.add_node("base", total_slots)
+            else:
+                assert slots_per_node >= 1
+                i, left = 0, total_slots
+                while left > 0:
+                    self.placement.add_node(f"base{i:02d}",
+                                            min(slots_per_node, left))
+                    left -= slots_per_node
+                    i += 1
 
     # --- accounting -------------------------------------------------------
     @property
     def total_slots(self) -> int:
-        return self._base_slots + sum(self._node_slots.values())
+        """Schedulable capacity (cordoned/draining nodes excluded)."""
+        return self.placement.total_capacity
 
     @property
     def used_slots(self) -> int:
@@ -52,27 +71,46 @@ class Cluster:
 
     # --- dynamic capacity (cloud node lifecycle) ---------------------------
     def add_node(self, node_id: str, slots: int) -> None:
-        assert node_id not in self._node_slots, node_id
         assert self.devices is None, \
             "dynamic nodes are unsupported on a device-backed cluster"
-        self._node_slots[node_id] = slots
-        self._slot_owner.extend([None] * slots)
+        self.placement.add_node(node_id, slots)
 
     def remove_node(self, node_id: str) -> int:
-        """Detach a node's slots.  Only unallocated slot indices are retired,
-        so the caller must evict or shrink victims first when the live slot
-        map is in use (the counting simulator never allocates indices)."""
-        slots = self._node_slots.pop(node_id)
-        retired = 0
-        for i in range(len(self._slot_owner) - 1, -1, -1):
-            if retired == slots:
-                break
-            if self._slot_owner[i] is None:
-                del self._slot_owner[i]
-                retired += 1
-        assert retired == slots, \
-            f"remove_node({node_id}): only {retired}/{slots} slots free"
-        return slots
+        """Detach an EMPTY node's slots.  Callers must displace residents
+        first (migrate/shrink/preempt — see repro.cloud.sim spot kills);
+        raises :class:`PlacementError` while any job is still resident."""
+        if node_id not in self.placement.nodes():
+            raise KeyError(node_id)
+        return self.placement.remove_node(node_id)
+
+    def cordon(self, node_id: str) -> None:
+        """Exclude a node from capacity and new placement (drain begins);
+        residents stay until migrated/evicted."""
+        self.placement.cordon(node_id)
+
+    def uncordon(self, node_id: str) -> None:
+        self.placement.uncordon(node_id)
+
+    def is_cordoned(self, node_id: str) -> bool:
+        return self.placement.is_cordoned(node_id)
+
+    @property
+    def node_count(self) -> int:
+        return self.placement.node_count
+
+    def nodes(self) -> List[str]:
+        return self.placement.nodes()
+
+    def residents(self, node_id: str) -> Dict[str, int]:
+        """job_id -> slots resident on this node (kill/drain blast set)."""
+        return self.placement.residents(node_id)
+
+    def resident_count(self, node_id: str) -> int:
+        return self.placement.resident_count(node_id)
+
+    def fragmentation(self) -> float:
+        """Free-capacity stranding (see PlacementMap.fragmentation)."""
+        return self.placement.fragmentation()
 
     def add_job(self, job: JobState):
         assert job.job_id not in self.jobs, job.job_id
@@ -96,42 +134,41 @@ class Cluster:
         out.sort(key=JobState.sort_key)
         return out
 
-    # --- device-range allocation (live operator) ---------------------------
+    # --- node-backed slot assignment ---------------------------------------
+    def can_place(self, n: int) -> bool:
+        return self.placement.free() >= n
+
+    def place(self, job_id: str, n: int,
+              strategy: Optional[str] = None) -> List[int]:
+        """Assign n concrete node-backed slots (strategy: pack/spread);
+        returns slot indices (stable per node, contiguous within a node —
+        the ICI-locality analog of the paper's pod affinity)."""
+        return self.placement.place(job_id, n, strategy)
+
+    def evict(self, job_id: str, n: Optional[int] = None,
+              prefer: Optional[str] = None) -> List[int]:
+        """Free n of a job's slots (all when None), draining/preferred nodes
+        first; returns the freed indices."""
+        return self.placement.evict(job_id, n, prefer)
+
+    def migrate(self, job_id: str, from_node: str) -> int:
+        """Relocate the job's slots off ``from_node`` onto free capacity
+        elsewhere; returns how many moved."""
+        return self.placement.migrate(job_id, from_node)
+
+    # --- compat aliases (live operator's device-range view) -----------------
     def allocate_slots(self, job_id: str, n: int) -> List[int]:
-        """Grab n slots, preferring a contiguous range (ICI-locality analog of
-        the paper's pod affinity)."""
-        free = [i for i, o in enumerate(self._slot_owner) if o is None]
-        assert len(free) >= n, (job_id, n, len(free))
-        # longest contiguous run first
-        runs, cur = [], [free[0]]
-        for a, b in zip(free, free[1:]):
-            if b == a + 1:
-                cur.append(b)
-            else:
-                runs.append(cur)
-                cur = [b]
-        runs.append(cur)
-        runs.sort(key=len, reverse=True)
-        chosen: List[int] = []
-        for run in runs:
-            take = min(n - len(chosen), len(run))
-            chosen.extend(run[:take])
-            if len(chosen) == n:
-                break
-        for i in chosen:
-            self._slot_owner[i] = job_id
-        return sorted(chosen)
+        return self.place(job_id, n)
 
     def release_slots(self, job_id: str, keep: int = 0) -> List[int]:
-        """Free all but ``keep`` of a job's slots (highest indices first)."""
-        owned = [i for i, o in enumerate(self._slot_owner) if o == job_id]
-        to_free = owned[keep:] if keep else owned
-        for i in to_free:
-            self._slot_owner[i] = None
-        return to_free
+        """Free all but ``keep`` of a job's slots."""
+        owned = self.placement.owned(job_id)
+        if owned <= keep:
+            return []
+        return self.evict(job_id, owned - keep)
 
     def slots_of(self, job_id: str) -> List[int]:
-        return [i for i, o in enumerate(self._slot_owner) if o == job_id]
+        return self.placement.slots_of(job_id)
 
     def devices_for_slots(self, slots: Sequence[int]) -> list:
         assert self.devices is not None

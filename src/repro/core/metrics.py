@@ -7,6 +7,11 @@
 - weighted mean response time: sum(priority * (start - submit)) / sum(priority)
 - weighted mean completion time: same with (end - submit)
 - cost fields (cloud runs only): node-hours x pool price, wasted-idle dollars
+- placement fields (multi-node runs): time-averaged fragmentation (free
+  capacity stranded on partially-used nodes) and spot-kill blast radius —
+  ``kill_blast_radius`` is the mean displaced slots PER RESIDENT JOB per
+  kill, i.e. how concentrated the damage is: ``pack`` placement focuses a
+  kill on few jobs (large radius), ``spread`` dilutes it (small radius)
 """
 from __future__ import annotations
 
@@ -44,12 +49,20 @@ class UtilizationLog:
     events: List[Tuple[float, int]] = field(default_factory=list)  # (t, used)
     # (t, provisioned slots); empty = capacity fixed at total_slots
     capacity_events: List[Tuple[float, int]] = field(default_factory=list)
+    # (t, fragmentation in [0,1]); empty = single-node cluster (undefined)
+    frag_events: List[Tuple[float, float]] = field(default_factory=list)
 
     def record(self, t: float, used: int):
         if self.events and self.events[-1][0] == t:
             self.events[-1] = (t, used)
         else:
             self.events.append((t, used))
+
+    def record_fragmentation(self, t: float, frag: float):
+        if self.frag_events and self.frag_events[-1][0] == t:
+            self.frag_events[-1] = (t, frag)
+        else:
+            self.frag_events.append((t, frag))
 
     def record_capacity(self, t: float, total: int):
         if self.capacity_events and self.capacity_events[-1][0] == t:
@@ -68,6 +81,11 @@ class UtilizationLog:
             cap = self.total_slots * (t1 - t0)
         return used / cap if cap > 0 else 0.0
 
+    def average_fragmentation(self, t0: float, t1: float) -> float:
+        if t1 <= t0 or not self.frag_events:
+            return 0.0
+        return _integrate(self.frag_events, t0, t1, 0.0) / (t1 - t0)
+
     def profile(self) -> List[Tuple[float, int]]:
         return list(self.events)
 
@@ -85,6 +103,11 @@ class ScheduleMetrics:
     idle_cost: float = 0.0         # $ of provisioned-but-unused slot time
     node_hours: float = 0.0        # billed node-hours
     spot_preemptions: int = 0      # nodes reclaimed by the spot market
+    # placement (multi-node runs) — zero on single-node simulations
+    avg_fragmentation: float = 0.0   # time-averaged stranded-free fraction
+    kill_blast_jobs: float = 0.0     # mean jobs displaced per spot kill
+    kill_blast_radius: float = 0.0   # mean displaced slots per victim job
+    kill_preemptions: float = 0.0    # mean checkpoint-preempted jobs per kill
 
     def row(self) -> str:
         s = (f"total={self.total_time:9.1f}s util={self.utilization:6.2%} "
@@ -95,6 +118,9 @@ class ScheduleMetrics:
             s += (f" cost=${self.total_cost:7.3f} idle=${self.idle_cost:6.3f}"
                   f" node_h={self.node_hours:5.2f}"
                   f" spot_kills={self.spot_preemptions}")
+        if self.avg_fragmentation > 0.0 or self.kill_blast_jobs > 0.0:
+            s += (f" frag={self.avg_fragmentation:5.2f}"
+                  f" blast={self.kill_blast_radius:4.1f}")
         return s
 
 
@@ -116,4 +142,5 @@ def compute_metrics(jobs: Sequence[JobState], util: UtilizationLog
         weighted_mean_completion=comp,
         rescale_count=sum(j.rescale_count for j in jobs),
         dropped_jobs=len(jobs) - len(done),
+        avg_fragmentation=util.average_fragmentation(t0, t1),
     )

@@ -15,6 +15,14 @@ simulated seconds) or by real wall time otherwise.
 Fault tolerance (paper §3.2.2): ``inject_failure`` kills a running job; if a
 disk checkpoint exists the job is resubmitted with the restart flag and
 resumes from its last snapshot, otherwise it restarts from scratch.
+
+Node awareness: with ``slots_per_node`` the device pool is partitioned into
+named nodes (``base00..``) through the same :class:`PlacementMap` the cloud
+simulator uses, so the controller kills/drains *specific jobs on specific
+nodes* (paper: pods on nodes).  ``inject_node_failure`` abruptly fails every
+job resident on a node; ``drain_node`` gracefully migrates residents' workers
+onto free slots elsewhere (a live rescale onto the new device set), shrinking
+jobs that cannot move and restart-requeueing jobs stuck with nowhere to go.
 """
 from __future__ import annotations
 
@@ -46,7 +54,9 @@ class _LiveActions(Actions):
     def create(self, job: JobState, replicas: int) -> bool:
         op = self.op
         live = op.live[job.job_id]
-        slots = op.cluster.allocate_slots(job.job_id, replicas)
+        if not op.cluster.can_place(replicas):
+            return False        # raced a cordon/drain: stay queued
+        slots = op.cluster.place(job.job_id, replicas)
         devices = op.cluster.devices_for_slots(slots)
         try:
             if live.trainer is None:
@@ -85,9 +95,12 @@ class _LiveActions(Actions):
             extra = replicas - job.replicas
             if extra > op.cluster.free_slots:
                 return False
-            op.cluster.allocate_slots(job.job_id, extra)
+            op.cluster.place(job.job_id, extra)
         else:
-            op.cluster.release_slots(job.job_id, keep=replicas)
+            # a drain names its node via _evict_prefer; cordoned nodes are
+            # vacated first regardless
+            op.cluster.evict(job.job_id, job.replicas - replicas,
+                             prefer=op._evict_prefer)
         slots = op.cluster.slots_of(job.job_id)
         devices = op.cluster.devices_for_slots(slots)
         timings = live.trainer.rescale(devices)
@@ -110,8 +123,12 @@ class ElasticClusterController:
                  policy: PolicyConfig = PolicyConfig(rescale_gap=0.0),
                  disk_store: Optional[DiskCheckpointStore] = None,
                  step_time_fn: Optional[Callable[[JobState], float]] = None,
-                 steps_per_tick: int = 1):
-        self.cluster = Cluster(slots, devices, devices_per_slot)
+                 steps_per_tick: int = 1,
+                 slots_per_node: Optional[int] = None,
+                 placement: str = "pack"):
+        self.cluster = Cluster(slots, devices, devices_per_slot,
+                               slots_per_node=slots_per_node,
+                               placement=placement)
         self.policy = ElasticPolicy(policy)
         self.actions = _LiveActions(self)
         self.live: Dict[str, LiveJob] = {}
@@ -122,6 +139,7 @@ class ElasticClusterController:
         self.steps_per_tick = steps_per_tick
         self.now = 0.0
         self._wall0 = time.perf_counter()
+        self._evict_prefer: Optional[str] = None  # forced-shrink target node
         self.util = UtilizationLog(slots)
         self.rescale_events: List[tuple] = []
         self.replica_trace: List[tuple] = []     # (t, job_id, replicas)
@@ -135,6 +153,9 @@ class ElasticClusterController:
 
     def _record_util(self):
         self.util.record(self.now, self.cluster.used_slots)
+        if self.cluster.node_count > 1:     # single-node: frag is undefined
+            self.util.record_fragmentation(self.now,
+                                           self.cluster.fragmentation())
         for j in self.cluster.jobs.values():
             self.replica_trace.append((self.now, j.job_id, j.replicas))
 
@@ -149,12 +170,17 @@ class ElasticClusterController:
         self.pending.sort(key=lambda j: j.spec.submit_time)
 
     def inject_failure(self, job_id: str):
-        """Kill a running job (node failure).  Resubmission goes through the
-        normal newJob path with the restart flag set (paper §3.2.2)."""
+        """Kill a running job (process failure).  Resubmission goes through
+        the normal newJob path with the restart flag set (paper §3.2.2)."""
+        self._fail_and_resubmit(job_id)
+
+    def _fail_and_resubmit(self, job_id: str, redistribute: bool = True):
+        """``redistribute=False`` defers the Fig.-3 pass so multi-victim
+        callers (node failure) don't expand a job they are about to kill."""
         job = self.cluster.jobs[job_id]
         live = self.live[job_id]
         assert job.status == JobStatus.RUNNING
-        self.cluster.release_slots(job_id)
+        self.cluster.evict(job_id)
         freed = job.replicas
         job.replicas = 0
         job.status = JobStatus.PENDING
@@ -163,11 +189,91 @@ class ElasticClusterController:
         self.restart_flags[job_id] = True
         del self.cluster.jobs[job_id]
         self._record_util()
-        # freed capacity is redistributed like a completion
-        self.policy.on_job_complete(self.cluster, freed, self.now, self.actions)
+        if redistribute:
+            # freed capacity is redistributed like a completion
+            self.policy.on_job_complete(self.cluster, freed, self.now,
+                                        self.actions)
         # resubmit immediately
         self.pending.append(job)
         self.pending.sort(key=lambda j: j.spec.submit_time)
+
+    # -- node-level operations (paper: pods on nodes) -------------------------
+    def inject_node_failure(self, node_id: str) -> List[str]:
+        """Abrupt node death: every job resident on the node loses workers
+        with no warning — per-worker state is unrecoverable, so each victim
+        restarts from its last disk checkpoint (or scratch), exactly like
+        :meth:`inject_failure` but with a placement-exact blast set.  The
+        node's capacity stays offline until :meth:`recover_node`."""
+        victims = sorted(self.cluster.residents(node_id))
+        self.cluster.cordon(node_id)
+        self.util.record_capacity(self.now, self.cluster.total_slots)
+        for job_id in victims:
+            # defer redistribution: a mid-loop Fig.-3 pass could expand (a
+            # real trainer rescale) a job this loop kills next
+            self._fail_and_resubmit(job_id, redistribute=False)
+        free = self.cluster.free_slots
+        if victims and free > 0:
+            self.policy.on_job_complete(self.cluster, free, self.now,
+                                        self.actions)
+        return victims
+
+    def recover_node(self, node_id: str) -> None:
+        """A failed/drained node rejoins; its capacity is offered to queued
+        and running jobs like a completion (Fig. 3 pass)."""
+        self.cluster.uncordon(node_id)
+        self.util.record_capacity(self.now, self.cluster.total_slots)
+        free = self.cluster.free_slots
+        if free > 0:
+            self.policy.on_job_complete(self.cluster, free, self.now,
+                                        self.actions)
+
+    def drain_node(self, node_id: str) -> None:
+        """Graceful drain (`kubectl drain` analog): cordon the node, then for
+        each resident job — highest priority first — migrate its workers onto
+        free slots elsewhere (live rescale onto the new device set), shrink
+        what cannot move, and restart-requeue jobs stuck with nowhere to go.
+        The node ends cordoned and empty."""
+        self.cluster.cordon(node_id)
+        self.util.record_capacity(self.now, self.cluster.total_slots)
+        residents = self.cluster.residents(node_id)
+        requeued = 0
+        for job_id in sorted(residents,
+                             key=lambda i: self.cluster.jobs[i].sort_key()):
+            job = self.cluster.jobs[job_id]
+            live = self.live[job_id]
+            moved = self.cluster.migrate(job_id, node_id)
+            if moved and live.trainer is not None:
+                slots = self.cluster.slots_of(job_id)
+                devices = self.cluster.devices_for_slots(slots)
+                timings = live.trainer.rescale(devices)
+                self.rescale_events.append(
+                    (self.now, job_id, job.replicas, job.replicas, timings))
+                self.advance_clock(timings.total)
+                job.device_ids = tuple(slots)
+            still = self.cluster.residents(node_id).get(job_id, 0)
+            if still:
+                target = job.spec.feasible(
+                    max(job.spec.min_replicas, job.replicas - still))
+                # only shrink when it clears the node: a partial shrink is a
+                # live rescale thrown away by the requeue below
+                if target < job.replicas and target <= job.replicas - still:
+                    self._evict_prefer = node_id
+                    try:
+                        self.actions.shrink(job, target)
+                    finally:
+                        self._evict_prefer = None
+            if self.cluster.residents(node_id).get(job_id, 0):
+                # nowhere to go: requeue — deferring redistribution so the
+                # freed slots aren't handed out before later residents get
+                # their chance to migrate onto them
+                self._fail_and_resubmit(job_id, redistribute=False)
+                requeued += 1
+        assert not self.cluster.residents(node_id)
+        free = self.cluster.free_slots
+        if requeued and free > 0:
+            self.policy.on_job_complete(self.cluster, free, self.now,
+                                        self.actions)
+        self._record_util()
 
     # -- control loop -------------------------------------------------------------
     def _process_submissions(self):

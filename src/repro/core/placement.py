@@ -1,0 +1,266 @@
+"""Placement layer: slot -> concrete node ownership (paper: pods on nodes).
+
+The counting :class:`~repro.core.cluster.Cluster` of earlier revisions knew
+*how many* slots a job held but not *where*; a spot kill therefore shrank
+"some" victims rather than the jobs actually resident on the killed node, and
+the autoscaler could not pick the emptiest node to drain.  ``PlacementMap``
+closes that gap: every slot has a stable global index, belongs to exactly one
+node, and is owned by at most one job.
+
+Concepts
+--------
+- **node**: a named group of slots with a stable, contiguous index range
+  (contiguity within a node is the ICI/pod-affinity locality analog).
+- **cordon**: a cordoned node is excluded from capacity and from new
+  placement, but existing residents stay until migrated/evicted — the
+  ``kubectl cordon``/drain analog used by spot kills and scale-down drains.
+- **strategy**: where new slots go.  ``pack`` fills the fullest non-empty
+  node first (keeps whole nodes empty so the autoscaler can release them);
+  ``spread`` round-robins across the emptiest nodes (minimizes how much of
+  any single job one node kill can take out).
+
+Invariants (property-tested in tests/test_placement_properties.py):
+- no slot is ever owned by two jobs;
+- per-node residency sums equal the total owned-slot count;
+- cordoned capacity is excluded from ``total_capacity`` and ``free()``.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional, Set
+
+
+class PlacementError(RuntimeError):
+    """A placement request that cannot be satisfied (not a crash: callers
+    that race capacity changes should pre-check with ``free()``)."""
+
+
+class PlacementMap:
+    STRATEGIES = ("pack", "spread")
+
+    def __init__(self, strategy: str = "pack"):
+        assert strategy in self.STRATEGIES, strategy
+        self.default_strategy = strategy
+        self._next_slot = 0
+        self._seq = itertools.count()
+        self._slots: Dict[str, List[int]] = {}        # node -> slot indices
+        self._node_seq: Dict[str, int] = {}           # deterministic tie-break
+        self._cordoned: Set[str] = set()
+        self._owner: Dict[int, Optional[str]] = {}    # slot -> job (None free)
+        self._slot_node: Dict[int, str] = {}
+
+    # -- node lifecycle ------------------------------------------------------
+    def add_node(self, node_id: str, slots: int) -> List[int]:
+        assert node_id not in self._slots, node_id
+        assert slots >= 1, slots
+        ids = list(range(self._next_slot, self._next_slot + slots))
+        self._next_slot += slots
+        self._slots[node_id] = ids
+        self._node_seq[node_id] = next(self._seq)
+        for i in ids:
+            self._owner[i] = None
+            self._slot_node[i] = node_id
+        return ids
+
+    def remove_node(self, node_id: str) -> int:
+        """Retire an EMPTY node (drain residents first — see cordon/evict/
+        migrate).  Raises :class:`PlacementError` while residents remain."""
+        res = self.residents(node_id)
+        if res:
+            raise PlacementError(
+                f"remove_node({node_id}): still hosts {res}")
+        ids = self._slots.pop(node_id)
+        self._node_seq.pop(node_id)
+        self._cordoned.discard(node_id)
+        for i in ids:
+            del self._owner[i]
+            del self._slot_node[i]
+        return len(ids)
+
+    def cordon(self, node_id: str) -> None:
+        """Exclude a node from capacity and from new placement; residents
+        stay until evicted/migrated (drain)."""
+        assert node_id in self._slots, node_id
+        self._cordoned.add(node_id)
+
+    def uncordon(self, node_id: str) -> None:
+        assert node_id in self._slots, node_id
+        self._cordoned.discard(node_id)
+
+    def is_cordoned(self, node_id: str) -> bool:
+        return node_id in self._cordoned
+
+    # -- queries -------------------------------------------------------------
+    def nodes(self) -> List[str]:
+        return list(self._slots)
+
+    @property
+    def node_count(self) -> int:
+        return len(self._slots)
+
+    def capacity(self, node_id: str) -> int:
+        return len(self._slots[node_id])
+
+    @property
+    def total_capacity(self) -> int:
+        """Schedulable slots: cordoned nodes are already on their way out."""
+        return sum(len(ids) for nid, ids in self._slots.items()
+                   if nid not in self._cordoned)
+
+    def free(self, node_id: Optional[str] = None) -> int:
+        """Free slots on schedulable nodes (or on one specific node)."""
+        if node_id is not None:
+            return sum(1 for i in self._slots[node_id]
+                       if self._owner[i] is None)
+        return sum(self.free(nid) for nid in self._slots
+                   if nid not in self._cordoned)
+
+    def owned(self, job_id: str) -> int:
+        return sum(1 for o in self._owner.values() if o == job_id)
+
+    def slots_of(self, job_id: str) -> List[int]:
+        return sorted(i for i, o in self._owner.items() if o == job_id)
+
+    def node_of(self, slot: int) -> str:
+        return self._slot_node[slot]
+
+    def residents(self, node_id: str) -> Dict[str, int]:
+        """job_id -> slot count resident on this node."""
+        out: Dict[str, int] = {}
+        for i in self._slots.get(node_id, ()):
+            o = self._owner[i]
+            if o is not None:
+                out[o] = out.get(o, 0) + 1
+        return out
+
+    def resident_count(self, node_id: str) -> int:
+        return sum(self.residents(node_id).values())
+
+    def job_nodes(self, job_id: str) -> Dict[str, int]:
+        """node_id -> slot count this job holds there (its blast footprint)."""
+        out: Dict[str, int] = {}
+        for i, o in self._owner.items():
+            if o == job_id:
+                nid = self._slot_node[i]
+                out[nid] = out.get(nid, 0) + 1
+        return out
+
+    def fragmentation(self) -> float:
+        """Fraction of free schedulable capacity stranded on partially-used
+        nodes (a whole-node consumer — scale-down, a min_replicas burst —
+        cannot use it without a drain).  0 = all free capacity sits on empty
+        nodes; 1 = every free slot shares a node with running work."""
+        free_total = 0
+        free_on_empty = 0
+        for nid in self._slots:
+            if nid in self._cordoned:
+                continue
+            f = self.free(nid)
+            free_total += f
+            if f == len(self._slots[nid]):
+                free_on_empty += f
+        return 1.0 - free_on_empty / free_total if free_total else 0.0
+
+    # -- placement -----------------------------------------------------------
+    def place(self, job_id: str, n: int, strategy: Optional[str] = None
+              ) -> List[int]:
+        """Assign ``n`` free slots to ``job_id`` per the strategy; returns the
+        chosen slot indices.  All-or-nothing: raises :class:`PlacementError`
+        (mutating nothing) when fewer than ``n`` schedulable slots are free."""
+        assert n >= 1, n
+        strategy = strategy or self.default_strategy
+        assert strategy in self.STRATEGIES, strategy
+        # one scan up front; strategies then work off the free-slot map (the
+        # scheduler's hottest path — no per-slot rescans)
+        free_ids: Dict[str, List[int]] = {}
+        for nid, ids in self._slots.items():
+            if nid in self._cordoned:
+                continue
+            f = [i for i in ids if self._owner[i] is None]
+            if f:
+                free_ids[nid] = f
+        if sum(len(f) for f in free_ids.values()) < n:
+            raise PlacementError(
+                f"place({job_id}, {n}): only {self.free()} slots free")
+        chosen: List[int] = []
+        if strategy == "spread":
+            # one slot at a time from the currently-emptiest node
+            while len(chosen) < n:
+                nid = max(free_ids, key=lambda k: (len(free_ids[k]),
+                                                   -self._node_seq[k]))
+                slot = free_ids[nid].pop(0)
+                self._owner[slot] = job_id
+                chosen.append(slot)
+                if not free_ids[nid]:
+                    del free_ids[nid]
+        else:                                         # pack: fullest first
+            order = sorted(free_ids, key=lambda k: (
+                len(free_ids[k]) == len(self._slots[k]),  # empties last
+                len(free_ids[k]),                         # least free first
+                self._node_seq[k]))
+            for nid in order:
+                take = free_ids[nid][:n - len(chosen)]
+                for i in take:
+                    self._owner[i] = job_id
+                chosen.extend(take)
+                if len(chosen) == n:
+                    break
+        return sorted(chosen)
+
+    def evict(self, job_id: str, n: Optional[int] = None,
+              prefer: Optional[str] = None) -> List[int]:
+        """Free ``n`` of the job's slots (all when None).  Order: the
+        ``prefer`` node first, then cordoned nodes, then nodes where the job
+        holds the fewest slots (clearing its footprint off marginal nodes),
+        highest index first within a node."""
+        owned = self.slots_of(job_id)
+        if n is None:
+            n = len(owned)
+        foot = self.job_nodes(job_id)
+
+        def key(slot: int):
+            nid = self._slot_node[slot]
+            return (nid != prefer,                 # preferred node first
+                    nid not in self._cordoned,     # then draining nodes
+                    foot[nid],                     # then thin footprints
+                    self._node_seq[nid],
+                    -slot)                         # highest index first
+        victims = sorted(owned, key=key)[:n]
+        for i in victims:
+            self._owner[i] = None
+        return sorted(victims)
+
+    def migrate(self, job_id: str, from_node: str,
+                strategy: Optional[str] = None) -> int:
+        """Move as many of the job's slots on ``from_node`` as fit onto free
+        schedulable slots elsewhere; returns the number moved.  Cordon the
+        node first if new placement must not land back on it."""
+        resident = [i for i in self._slots[from_node]
+                    if self._owner[i] == job_id]
+        # free slots NOT on from_node (it may be uncordoned)
+        movable = min(len(resident),
+                      self.free() - (0 if from_node in self._cordoned
+                                     else self.free(from_node)))
+        if movable <= 0:
+            return 0
+        was_cordoned = from_node in self._cordoned
+        self._cordoned.add(from_node)              # keep place() off it
+        try:
+            for i in resident[:movable]:
+                self._owner[i] = None
+            self.place(job_id, movable, strategy)
+        finally:
+            if not was_cordoned:
+                self._cordoned.discard(from_node)
+        return movable
+
+    # -- invariants (test hook) ----------------------------------------------
+    def check(self) -> None:
+        owners: Dict[str, int] = {}
+        for i, o in self._owner.items():
+            assert i in self._slot_node
+            if o is not None:
+                owners[o] = owners.get(o, 0) + 1
+        per_node = sum(self.resident_count(nid) for nid in self._slots)
+        assert per_node == sum(owners.values()), (per_node, owners)
+        assert 0.0 <= self.fragmentation() <= 1.0

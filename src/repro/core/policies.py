@@ -27,7 +27,16 @@ from repro.core.job import JobState, JobStatus
 
 class Actions(Protocol):
     """Effect interface; implementations must update cluster accounting
-    synchronously (create/shrink/expand return success)."""
+    synchronously (create/shrink/expand return success).
+
+    Placement contract: every replica an implementation grants must be backed
+    by a concrete node-owned slot (``Cluster.place``) and every replica it
+    revokes must free one (``Cluster.evict``) — both the simulator's
+    ``_SimActions`` and the live operator's ``_LiveActions`` thread placement
+    through this way, so node kills and drains displace exactly the jobs
+    resident on the affected node.  ``create``/``expand`` may return False
+    when capacity raced away (a cordon or spot kill between the policy's
+    ``free_slots`` read and the call); the policy then re-enqueues."""
 
     def create(self, job: JobState, replicas: int) -> bool: ...
     def expand(self, job: JobState, replicas: int) -> bool: ...

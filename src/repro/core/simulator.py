@@ -46,9 +46,12 @@ class _SimActions:
     def create(self, job: JobState, replicas: int) -> bool:
         sim = self.sim
         # capacity can shrink under a running policy (spot kill between the
-        # policy's free_slots read and this call) — refuse, don't crash
+        # policy's free_slots read and this call) — refuse, don't crash.
+        # free_slots <= placement free always (jobs resident on cordoned
+        # nodes count as used), so this one check also guarantees place()
         if replicas <= 0 or replicas > sim.cluster.free_slots:
             return False
+        sim.cluster.place(job.job_id, replicas)
         job.status = JobStatus.RUNNING
         job.replicas = replicas
         job.last_action = sim.now
@@ -81,6 +84,14 @@ class _SimActions:
         # that deficit)
         if delta > 0 and delta > sim.cluster.free_slots:
             return False
+        if delta > 0:
+            sim.cluster.place(job.job_id, delta)
+        else:
+            # a forced shrink (spot kill) names the dying node via
+            # _evict_prefer so the freed slots come off it exactly — even
+            # when another node is cordoned for an in-flight drain; absent
+            # that, cordoned nodes are vacated first anyway
+            sim.cluster.evict(job.job_id, -delta, prefer=sim._evict_prefer)
         sim._sync_progress(job)
         wl = sim.workloads[job.job_id]
         overhead = wl.rescale.total(job.replicas, replicas, wl.data_bytes)
@@ -103,6 +114,7 @@ class _SimActions:
         wl = sim.workloads[job.job_id]
         # the victim pays the disk checkpoint before its slots free up
         sim.now += wl.rescale.preempt_cost(job.replicas, wl.data_bytes)
+        sim.cluster.evict(job.job_id)
         job.status = JobStatus.QUEUED
         job.replicas = 0
         job.version += 1            # invalidate its completion event
@@ -116,8 +128,11 @@ class _SimActions:
 
 
 class Simulator:
-    def __init__(self, total_slots: int, policy_cfg: PolicyConfig):
-        self.cluster = Cluster(total_slots)
+    def __init__(self, total_slots: int, policy_cfg: PolicyConfig, *,
+                 placement: str = "pack",
+                 slots_per_node: Optional[int] = None):
+        self.cluster = Cluster(total_slots, slots_per_node=slots_per_node,
+                               placement=placement)
         self.policy = ElasticPolicy(policy_cfg)
         self.queue = EventQueue()
         self.actions = _SimActions(self)
@@ -125,10 +140,14 @@ class Simulator:
         self.util = UtilizationLog(total_slots)
         self.now = 0.0
         self.total_overhead = 0.0
+        self._evict_prefer: Optional[str] = None   # forced-shrink target node
 
     # -- bookkeeping ---------------------------------------------------------
     def _record_util(self):
         self.util.record(self.now, self.cluster.used_slots)
+        if self.cluster.node_count > 1:     # single-node: frag is undefined
+            self.util.record_fragmentation(self.now,
+                                           self.cluster.fragmentation())
 
     def _rate(self, job: JobState) -> float:
         wl = self.workloads[job.job_id]
@@ -179,6 +198,7 @@ class Simulator:
                     self._schedule_completion(job)
                     continue
                 freed = job.replicas
+                self.cluster.evict(job.job_id)
                 job.status = JobStatus.COMPLETED
                 job.end_time = self.now
                 job.replicas = 0

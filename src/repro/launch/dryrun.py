@@ -47,7 +47,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     from repro.launch.mesh import chips_in, make_production_mesh
     from repro.utils.flops import cell_flops, cell_hbm_bytes
     from repro.utils.hlo import collective_bytes
-    from repro.utils.roofline import roofline_from_analysis
+    from repro.utils.roofline import (normalize_cost_analysis,
+                                      roofline_from_analysis)
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
@@ -78,7 +79,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                        + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
     }
     rec["fits_hbm"] = rec["memory"]["peak_bytes"] <= 16e9
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     rec["xla_cost"] = {"flops": ca.get("flops", 0.0),
                        "bytes": ca.get("bytes accessed", 0.0)}
 

@@ -89,9 +89,24 @@ class RooflineTerms:
         }
 
 
-def roofline_from_analysis(cost: dict, collective_bytes_per_device: float,
+def normalize_cost_analysis(cost) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` drifted across JAX versions: older
+    releases return a list with one properties-dict per program, newer ones
+    return the dict directly (and either may be None/empty).  Normalize to a
+    flat dict so callers never care."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
+def roofline_from_analysis(cost, collective_bytes_per_device: float,
                            model_flops_global: float, chips: int,
                            hw: HW = V5E) -> RooflineTerms:
+    """``cost`` is a ``cost_analysis()`` result in any JAX flavor (dict,
+    [dict], or None) or a hand-built {'flops', 'bytes accessed'} dict."""
+    cost = normalize_cost_analysis(cost)
     return RooflineTerms(
         flops_per_device=float(cost.get("flops", 0.0)),
         hbm_bytes_per_device=float(cost.get("bytes accessed", 0.0)),

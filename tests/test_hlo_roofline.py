@@ -87,3 +87,20 @@ def test_roofline_from_cost_analysis_dict():
     assert t.flops_per_device == 10.0
     assert t.hbm_bytes_per_device == 20.0
     assert t.collective_bytes_per_device == 5.0
+
+
+def test_roofline_normalizes_cost_analysis_jax_flavors():
+    """compiled.cost_analysis() drifted across JAX versions: older releases
+    return [properties-dict], newer ones the dict itself, either may be
+    None/empty — all four shapes must work (the list flavor is the seed
+    failure behind test_dryrun_machinery_small_mesh)."""
+    from repro.utils.roofline import normalize_cost_analysis
+    d = {"flops": 10.0, "bytes accessed": 20.0}
+    assert normalize_cost_analysis(d) == d
+    assert normalize_cost_analysis([d]) == d
+    assert normalize_cost_analysis(None) == {}
+    assert normalize_cost_analysis([]) == {}
+    t = roofline_from_analysis([d], collective_bytes_per_device=5.0,
+                               model_flops_global=100.0, chips=4)
+    assert t.flops_per_device == 10.0
+    assert t.hbm_bytes_per_device == 20.0

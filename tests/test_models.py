@@ -7,6 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# ~3 min of per-arch jit compiles: slow lane (CI runs it non-blocking)
+pytestmark = pytest.mark.slow
+
 from repro.configs import ALL_ARCHS, smoke_config
 from repro.models import (decode_step, forward_hidden, init_params, loss_fn,
                           pad_cache, prefill)

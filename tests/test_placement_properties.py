@@ -1,0 +1,154 @@
+"""Hypothesis property tests for the placement layer's invariants:
+
+- no slot is ever owned by two jobs, under ANY op sequence;
+- per-node residency sums equal the cluster's counted ``used_slots`` after
+  every simulator event;
+- a spot kill displaces EXACTLY the killed node's residents — bystander jobs
+  keep their replica counts and are never preempted.
+"""
+import math
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.cloud import CloudProvider, CloudSimulator, NodePool, SPOT
+from repro.core.job import JobSpec, JobStatus
+from repro.core.perf_model import PiecewiseScalingModel, RescaleModel
+from repro.core.placement import PlacementError, PlacementMap
+from repro.core.policies import PolicyConfig
+from repro.core.simulator import SimWorkload
+
+
+# ---------------------------------------------------------------------------
+# PlacementMap under arbitrary op sequences
+# ---------------------------------------------------------------------------
+
+@st.composite
+def op_sequences(draw):
+    n_nodes = draw(st.integers(1, 5))
+    node_slots = [draw(st.integers(1, 8)) for _ in range(n_nodes)]
+    ops = draw(st.lists(st.tuples(
+        st.sampled_from(["place", "evict", "cordon", "uncordon", "migrate"]),
+        st.integers(0, 4),              # job index
+        st.integers(0, n_nodes - 1),    # node index
+        st.integers(1, 8),              # count
+    ), max_size=40))
+    strategy = draw(st.sampled_from(["pack", "spread"]))
+    return node_slots, ops, strategy
+
+
+@settings(max_examples=80, deadline=None)
+@given(op_sequences())
+def test_no_slot_double_owned_under_any_op_sequence(seq):
+    node_slots, ops, strategy = seq
+    p = PlacementMap(strategy)
+    names = [f"n{i}" for i in range(len(node_slots))]
+    for name, slots in zip(names, node_slots):
+        p.add_node(name, slots)
+    for kind, ji, ni, count in ops:
+        job = f"job{ji}"
+        if kind == "place":
+            try:
+                p.place(job, count)
+            except PlacementError:
+                pass
+        elif kind == "evict":
+            p.evict(job, min(count, p.owned(job)) or None)
+        elif kind == "cordon":
+            p.cordon(names[ni])
+        elif kind == "uncordon":
+            p.uncordon(names[ni])
+        elif kind == "migrate":
+            p.migrate(job, names[ni])
+        # invariants after EVERY op
+        p.check()
+        owned_total = sum(p.owned(f"job{k}") for k in range(5))
+        residency_total = sum(p.resident_count(n) for n in names)
+        assert owned_total == residency_total
+        assert owned_total + p.free() <= sum(node_slots)
+        assert 0.0 <= p.fragmentation() <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# CloudSimulator: residency == used_slots after every event; kills are exact
+# ---------------------------------------------------------------------------
+
+def _wl(steps, t_step):
+    return SimWorkload(
+        scaling=PiecewiseScalingModel(((1.0, t_step), (64.0, t_step))),
+        total_work=steps, data_bytes=1e6, rescale=RescaleModel())
+
+
+@st.composite
+def cloud_streams(draw):
+    n_nodes = draw(st.integers(2, 4))
+    jobs = []
+    for i in range(draw(st.integers(2, 8))):
+        mn = draw(st.integers(1, 8))
+        mx = draw(st.integers(mn, 16))
+        jobs.append(dict(job_id=f"j{i:02d}",
+                         priority=draw(st.integers(1, 5)),
+                         min_replicas=mn, max_replicas=mx,
+                         submit_time=float(draw(st.integers(0, 200))),
+                         work=float(draw(st.integers(1, 100))),
+                         t_step=draw(st.floats(0.1, 2.0))))
+    kill_at = float(draw(st.integers(5, 300)))
+    kill_idx = draw(st.integers(0, n_nodes - 1))
+    strategy = draw(st.sampled_from(["pack", "spread"]))
+    return n_nodes, jobs, kill_at, kill_idx, strategy
+
+
+class _AuditedCloudSim(CloudSimulator):
+    def _record_util(self):
+        super()._record_util()
+        placed = sum(self.cluster.resident_count(n)
+                     for n in self.cluster.nodes())
+        assert placed == self.cluster.used_slots, \
+            f"residency {placed} != used {self.cluster.used_slots}"
+        self.cluster.placement.check()
+
+
+@settings(max_examples=40, deadline=None)
+@given(cloud_streams())
+def test_residency_equals_used_slots_and_kills_are_node_exact(stream):
+    n_nodes, jobs, kill_at, kill_idx, strategy = stream
+    prov = CloudProvider([NodePool(
+        "sp", slots_per_node=8, market=SPOT, initial_nodes=n_nodes,
+        max_nodes=n_nodes, spot_lifetime_mean=1e12)])
+    sim = _AuditedCloudSim(prov, PolicyConfig(rescale_gap=0.0),
+                           placement=strategy)
+    victim_node = sorted(prov.nodes)[kill_idx]
+    prov.inject_spot_kill(victim_node, kill_at, sim.queue)
+
+    snapshot = {}
+    before = {}
+    orig = sim._on_spot_kill
+
+    def probed(node_id):
+        if node_id == victim_node:
+            snapshot.update(sim.cluster.residents(node_id))
+            before.update({j.job_id: (j.replicas, j.preempt_count)
+                           for j in sim.cluster.running_jobs()})
+        orig(node_id)
+        if node_id == victim_node and before:
+            # bystanders (running jobs NOT resident on the killed node) are
+            # never harmed by the kill: no shrink, no preemption.  They MAY
+            # legitimately be EXPANDED — _on_spot_kill ends with a Fig.-3
+            # redistribution of capacity the victims' eviction freed up
+            for jid, (reps, pre) in before.items():
+                if jid in snapshot:
+                    continue
+                j = sim.cluster.jobs[jid]
+                assert j.replicas >= reps, f"bystander {jid} shrunk"
+                assert j.preempt_count == pre, f"bystander {jid} preempted"
+    sim._on_spot_kill = probed
+    sim.run()
+    # every displaced job was genuinely resident on the killed node
+    if sim.kill_blasts:
+        jobs_displaced, slots_displaced, _ = sim.kill_blasts[0]
+        assert jobs_displaced == len(snapshot)
+        assert slots_displaced == sum(snapshot.values())

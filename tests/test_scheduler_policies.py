@@ -125,6 +125,7 @@ def test_completion_expands_highest_priority_first():
                 continue
             s._sync_progress(job)
             freed = job.replicas
+            s.cluster.evict(jid)         # completion frees node-backed slots
             job.status = JobStatus.COMPLETED
             job.end_time = s.now
             job.replicas = 0
