@@ -9,6 +9,16 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     sys.stdout.flush()
 
 
+def kv(*fragments: str, **fields) -> str:
+    """Build a derived-field string: ``k=v;...``.  Floats render compactly;
+    string ``fragments`` (e.g. a WorkloadStats.kv()) are spliced in as-is so
+    characterization columns ride along with metric columns."""
+    parts = [f for f in fragments if f]
+    for k, v in fields.items():
+        parts.append(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}")
+    return ";".join(parts)
+
+
 def time_call(fn, *args, repeat: int = 3, **kw):
     """Median wall time in microseconds."""
     ts = []

@@ -16,6 +16,7 @@ MODULES = [
     ("table1", "benchmarks.table1_policies"),
     ("table2", "benchmarks.table2_cloud_cost"),
     ("table3", "benchmarks.table3_placement"),
+    ("table4", "benchmarks.table4_traces"),
     ("roofline", "benchmarks.roofline"),
 ]
 

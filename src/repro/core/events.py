@@ -2,16 +2,35 @@
 from __future__ import annotations
 
 import heapq
+import math
 import itertools
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
 
+#: default tiebreak: sorts AFTER any finite submit key, so the same-time
+#: semantics are "arrivals first": every submit at time t is processed
+#: before any other event at t (a tick or kill landing exactly on an
+#: arrival timestamp sees that arrival).  Default-keyed events keep plain
+#: insertion order among themselves.  Note this is a (deliberate) semantic
+#: change from the pre-tiebreak seq-only ordering in the rare case where a
+#: non-submit event was pushed before submit() was called with the same
+#: timestamp (e.g. the autoscaler's t=0 bootstrap tick now runs after t=0
+#: arrivals instead of seeing an empty queue).
+_LAST = (math.inf,)
+
+
 @dataclass(order=True)
 class Event:
     time: float
-    seq: int
-    kind: str = field(compare=False)
+    # orders same-time events BEFORE insertion order.  Simulator.submit
+    # passes (-priority, job_id) so bursty arrivals that collapse onto one
+    # timestamp process in a canonical order no matter the order submit()
+    # was called in (trace replay is insertion-agnostic); every other event
+    # kind keeps plain insertion order via the _LAST sentinel.
+    tiebreak: tuple = field(default=_LAST)
+    seq: int = 0
+    kind: str = field(compare=False, default="")
     payload: Any = field(compare=False, default=None)
 
 
@@ -20,8 +39,9 @@ class EventQueue:
         self._heap = []
         self._count = itertools.count()
 
-    def push(self, time: float, kind: str, payload: Any = None) -> Event:
-        ev = Event(time, next(self._count), kind, payload)
+    def push(self, time: float, kind: str, payload: Any = None,
+             tiebreak: tuple = _LAST) -> Event:
+        ev = Event(time, tiebreak, next(self._count), kind, payload)
         heapq.heappush(self._heap, ev)
         return ev
 

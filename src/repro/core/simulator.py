@@ -170,9 +170,14 @@ class Simulator:
 
     # -- API -----------------------------------------------------------------
     def submit(self, spec: JobSpec, workload: SimWorkload):
+        """Register an arrival at ``spec.submit_time``.  Arrival processing
+        order depends only on (submit_time, -priority, job_id) — never on the
+        order submit() was called in — so replaying a bursty trace (many
+        arrivals collapsed onto one timestamp) is insertion-agnostic."""
         state = JobState(spec=spec, work_remaining=workload.total_work)
         self.workloads[spec.job_id] = workload
-        self.queue.push(spec.submit_time, "submit", state)
+        self.queue.push(spec.submit_time, "submit", state,
+                        tiebreak=(-spec.priority, spec.job_id))
 
     def run(self) -> ScheduleMetrics:
         while len(self.queue):
@@ -262,12 +267,14 @@ def make_jacobi_jobs(seed: int, n_jobs: int = 16, submission_gap: float = 90.0,
     return specs
 
 
-def run_variant(variant: str, specs: Sequence[JobSpec], *, total_slots: int,
-                rescale_gap: float = 180.0, launcher_reserve: int = 0,
-                workload_fn: Callable[[JobSpec], SimWorkload] = None
-                ) -> ScheduleMetrics:
-    """Run one scheduling policy variant (paper §4.3's four schedulers)."""
-    workload_fn = workload_fn or (lambda s: jacobi_workload(s.workload))
+def variant_setup(variant: str, specs: Sequence[JobSpec], *,
+                  rescale_gap: float = 180.0, launcher_reserve: int = 0):
+    """Specs transform + policy for one scheduler variant (paper §4.3's four
+    schedulers plus the preempting extension).  Returns ``(specs, pcfg,
+    policy)`` where ``policy`` is None for the plain config-driven
+    ElasticPolicy.  Shared by :func:`run_variant` and the trace-replay layer
+    (``repro.workloads.replay``) so the variant semantics cannot drift."""
+    policy = None
     if variant == "rigid_min":
         specs = [s.rigid(s.min_replicas) for s in specs]
         pcfg = PolicyConfig(rescale_gap=rescale_gap,
@@ -281,9 +288,28 @@ def run_variant(variant: str, specs: Sequence[JobSpec], *, total_slots: int,
     elif variant == "elastic":
         pcfg = PolicyConfig(rescale_gap=rescale_gap,
                             launcher_reserve=launcher_reserve)
+    elif variant == "elastic_preempt":
+        from repro.core.autoscale import PreemptingPolicy
+        pcfg = PolicyConfig(rescale_gap=rescale_gap,
+                            launcher_reserve=launcher_reserve)
+        policy = PreemptingPolicy(pcfg)
     else:
         raise ValueError(variant)
+    return list(specs), pcfg, policy
+
+
+def run_variant(variant: str, specs: Sequence[JobSpec], *, total_slots: int,
+                rescale_gap: float = 180.0, launcher_reserve: int = 0,
+                workload_fn: Callable[[JobSpec], SimWorkload] = None
+                ) -> ScheduleMetrics:
+    """Run one scheduling policy variant (paper §4.3's four schedulers)."""
+    workload_fn = workload_fn or (lambda s: jacobi_workload(s.workload))
+    specs, pcfg, policy = variant_setup(variant, specs,
+                                        rescale_gap=rescale_gap,
+                                        launcher_reserve=launcher_reserve)
     sim = Simulator(total_slots, pcfg)
+    if policy is not None:
+        sim.policy = policy
     for s in specs:
         sim.submit(s, workload_fn(s))
     return sim.run()

@@ -1,0 +1,26 @@
+"""Workload subsystem: trace ingestion, synthetic generators, characterization
+stats, and open-loop replay through the simulators (see README §Workloads).
+"""
+from repro.workloads.replay import (REPLAY_VARIANTS, ReplayConfig,
+                                    TraceScalingModel, compile_job,
+                                    compile_trace, replay_cloud,
+                                    replay_variant)
+from repro.workloads.stats import (WorkloadStats, characterize,
+                                   hill_tail_index)
+from repro.workloads.synthetic import (GENERATORS, bursty_trace,
+                                       diurnal_trace, generate,
+                                       heavy_tail_trace, poisson_trace,
+                                       uniform_trace)
+from repro.workloads.trace import (HIGH_PRIORITY, LOW_PRIORITY, LOADERS,
+                                   Trace, TraceJob, fixture_path,
+                                   load_azure_trace, load_google_trace)
+
+__all__ = [
+    "REPLAY_VARIANTS", "ReplayConfig", "TraceScalingModel", "compile_job",
+    "compile_trace", "replay_cloud", "replay_variant",
+    "WorkloadStats", "characterize", "hill_tail_index",
+    "GENERATORS", "bursty_trace", "diurnal_trace", "generate",
+    "heavy_tail_trace", "poisson_trace", "uniform_trace",
+    "HIGH_PRIORITY", "LOW_PRIORITY", "LOADERS", "Trace", "TraceJob",
+    "fixture_path", "load_azure_trace", "load_google_trace",
+]

@@ -272,8 +272,10 @@ def test_budget_stranded_demand_releases_idle_nodes():
         idle_timeout=60.0, budget_cap=1e-9,    # provisioning always blocked
         max_horizon=3600.0))
     sim = CloudSimulator(prov, PolicyConfig(rescale_gap=0.0), autoscaler=asc)
+    # `busy` must grab its node before `wants16` arrives (same-time arrivals
+    # now process priority-desc, which would hand wants16 both nodes)
     sim.submit(JobSpec("busy", 1, 8, 8, 0.0), wl(600))     # holds one node
-    sim.submit(JobSpec("wants16", 5, 16, 16, 0.0), wl(10))  # satisfiable,
+    sim.submit(JobSpec("wants16", 5, 16, 16, 0.5), wl(10))  # satisfiable,
     m = sim.run()                                           # but unfundable
     # the second node idled while `busy` ran; stranded demand released it
     assert asc.scale_downs >= 1
@@ -392,8 +394,10 @@ def test_spot_victim_restarts_despite_rescale_gap_cooldown():
     ])
     pcfg = PolicyConfig(rescale_gap=600.0)      # long cool-down
     sim = CloudSimulator(prov, pcfg, policy=PreemptingPolicy(pcfg))
+    # stagger so `victim` packs onto the first node (the one killed below) —
+    # same-time arrivals process priority-desc since the tiebreak change
     sim.submit(JobSpec("victim", 1, 8, 8, 0.0), wl(200))
-    sim.submit(JobSpec("other", 5, 8, 8, 0.0), wl(60))   # done at ~60 s
+    sim.submit(JobSpec("other", 5, 8, 8, 0.5), wl(60))   # done at ~60 s
     prov.inject_spot_kill(sorted(prov.nodes)[0], 30.0, sim.queue)
     m = sim.run()
     victim = sim.cluster.jobs["victim"]

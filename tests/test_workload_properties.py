@@ -1,0 +1,81 @@
+"""Hypothesis properties for the workload subsystem:
+
+- every generator is a pure function of its seed (same seed, same Trace);
+- arrivals are sorted and non-negative for ANY generator parameters;
+- normalization keeps every demand inside the target cluster bounds and
+  every priority in the paper's two classes;
+- compilation brackets the natural size: min <= natural <= max <= cluster.
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.workloads import (GENERATORS, HIGH_PRIORITY, LOW_PRIORITY,
+                             ReplayConfig, Trace, TraceJob, compile_trace,
+                             generate)
+
+KINDS = st.sampled_from(sorted(GENERATORS))
+
+
+@st.composite
+def raw_traces(draw):
+    n = draw(st.integers(1, 30))
+    jobs = tuple(
+        TraceJob(job_id=f"j{i}",
+                 submit_time=draw(st.floats(0.0, 1e6, allow_nan=False)),
+                 duration=draw(st.floats(1e-3, 1e6, allow_nan=False,
+                                         exclude_min=True)),
+                 slots=draw(st.integers(1, 10_000)),
+                 priority=draw(st.integers(0, 11)))
+        for i in range(n))
+    return Trace(name="t", jobs=jobs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(kind=KINDS, seed=st.integers(0, 2**31), n=st.integers(1, 40))
+def test_generators_pure_in_seed(kind, seed, n):
+    assert generate(kind, n_jobs=n, seed=seed) == \
+        generate(kind, n_jobs=n, seed=seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(kind=KINDS, seed=st.integers(0, 2**31), n=st.integers(1, 40))
+def test_generator_arrivals_sorted_nonnegative(kind, seed, n):
+    t = generate(kind, n_jobs=n, seed=seed)
+    arr = t.arrivals()
+    assert len(t) == n
+    assert arr == sorted(arr)
+    assert all(a >= 0.0 for a in arr)
+    assert all(j.slots >= 1 and j.duration > 0.0 for j in t)
+
+
+@settings(max_examples=50, deadline=None)
+@given(trace=raw_traces(), cluster=st.integers(1, 256),
+       frac=st.floats(0.1, 1.0))
+def test_normalized_demands_within_cluster_bounds(trace, cluster, frac):
+    n = trace.normalized(cluster, max_fraction=frac)
+    peak_target = max(1, int(cluster * frac))
+    for j in n:
+        # rounding can add at most half a job's worth above the linear map,
+        # never above the pre-rescale peak target (the peak maps exactly)
+        assert 1 <= j.slots <= peak_target
+        assert j.priority in (LOW_PRIORITY, HIGH_PRIORITY)
+        assert j.submit_time >= 0.0
+    assert n.jobs[0].submit_time == 0.0
+    assert [j.submit_time for j in n] == sorted(j.submit_time for j in n)
+
+
+@settings(max_examples=50, deadline=None)
+@given(trace=raw_traces(), cluster=st.integers(1, 256),
+       elasticity=st.floats(1.0, 8.0))
+def test_compile_brackets_natural_size(trace, cluster, elasticity):
+    cfg = ReplayConfig(cluster_slots=cluster, elasticity=elasticity)
+    for (spec, wl), tj in zip(compile_trace(trace, cfg), trace.jobs):
+        natural = min(max(1, tj.slots), cluster)
+        assert 1 <= spec.min_replicas <= natural
+        assert natural <= spec.max_replicas <= cluster
+        assert wl.total_work == tj.duration
+        assert wl.scaling.time_per_step(natural) == pytest.approx(1.0)

@@ -1,0 +1,293 @@
+"""Workload subsystem: trace loaders, normalization invariants, seeded
+generators, characterization stats, and open-loop replay through both the
+fixed-capacity and the cloud simulators (README §Workloads).
+
+Everything here must stay seconds-fast and JAX-free: it gates the CI fast
+lane alongside the scheduler/cloud suites.
+"""
+import math
+
+import pytest
+
+from repro.cloud import (AutoscalerConfig, CloudProvider, NodeAutoscaler,
+                         NodePool)
+from repro.core.job import JobStatus
+from repro.core.policies import PolicyConfig
+from repro.core.simulator import Simulator
+from repro.workloads import (GENERATORS, HIGH_PRIORITY, LOW_PRIORITY,
+                             ReplayConfig, Trace, TraceJob, bursty_trace,
+                             characterize, compile_job, compile_trace,
+                             fixture_path, generate, heavy_tail_trace,
+                             hill_tail_index, load_azure_trace,
+                             load_google_trace, replay_cloud, replay_variant,
+                             uniform_trace)
+
+
+# ---------------------------------------------------------------------------
+# CSV loader adapters
+# ---------------------------------------------------------------------------
+
+def test_google_loader_units_and_fields(tmp_path):
+    p = tmp_path / "g.csv"
+    p.write_text(
+        "time,job_id,priority,cpu_request,duration,user\n"
+        "2000000,j1,9,0.5,60000000,alice\n"
+        "1000000,j0,0,1.5,30000000,bob\n")     # out of order on purpose
+    t = load_google_trace(str(p), slots_per_machine=8)
+    assert len(t) == 2 and t.source == str(p)
+    by_id = {j.job_id: j for j in t}
+    assert by_id["j1"].submit_time == pytest.approx(2.0)      # us -> s
+    assert by_id["j1"].duration == pytest.approx(60.0)
+    assert by_id["j1"].slots == 4                             # ceil(0.5 * 8)
+    assert by_id["j0"].slots == 12                            # >1 machine
+    assert by_id["j0"].user == "bob"
+
+
+def test_google_loader_column_aliases(tmp_path):
+    p = tmp_path / "g.csv"
+    p.write_text("timestamp,collection_id,priority,resource_request_cpus,"
+                 "duration_us\n5000000,c7,11,0.25,1000000\n")
+    (j,) = load_google_trace(str(p)).jobs
+    assert j.job_id == "c7" and j.slots == 2 and j.priority == 11
+
+
+def test_azure_loader_lifetimes_and_categories(tmp_path):
+    p = tmp_path / "a.csv"
+    p.write_text(
+        "vm_id,vm_created,vm_deleted,core_count,category\n"
+        "v0,100.0,400.0,4,Interactive\n"
+        "v1,50.0,3650.0,16,delay-insensitive\n"
+        "v2,0.0,60.0,1,7\n")                   # numeric category passthrough
+    t = load_azure_trace(str(p))
+    by_id = {j.job_id: j for j in t}
+    assert by_id["v0"].duration == pytest.approx(300.0)
+    assert by_id["v0"].priority > by_id["v1"].priority   # interactive ranks up
+    assert by_id["v1"].slots == 16
+    assert by_id["v2"].priority == 7
+
+
+def test_azure_loader_skips_censored_lifetimes(tmp_path):
+    p = tmp_path / "a.csv"
+    p.write_text(
+        "vm_id,vm_created,vm_deleted,core_count,category\n"
+        "alive,100.0,100.0,4,Unknown\n"       # still up at snapshot end
+        "done,0.0,60.0,2,Unknown\n")
+    t = load_azure_trace(str(p))
+    assert [j.job_id for j in t] == ["done"]
+
+
+def test_bundled_fixtures_load_and_normalize():
+    for loader, name in ((load_google_trace, "google_sample.csv"),
+                         (load_azure_trace, "azure_sample.csv")):
+        t = loader(fixture_path(name))
+        assert len(t) >= 20
+        n = t.normalized(64)
+        assert n.jobs[0].submit_time == 0.0
+        assert all(1 <= j.slots <= 32 for j in n)
+        assert {j.priority for j in n} <= {LOW_PRIORITY, HIGH_PRIORITY}
+
+
+# ---------------------------------------------------------------------------
+# normalization passes
+# ---------------------------------------------------------------------------
+
+def _raw(jobs):
+    return Trace(name="t", jobs=tuple(jobs))
+
+
+def test_rebase_and_sort_round_trip():
+    t = _raw([TraceJob("b", 500.0, 10.0, 2, 3),
+              TraceJob("a", 100.0, 10.0, 2, 3)]).sorted().rebase_time()
+    assert [j.job_id for j in t] == ["a", "b"]
+    assert t.jobs[0].submit_time == 0.0
+    assert t.jobs[1].submit_time == pytest.approx(400.0)
+
+
+def test_clamp_durations_bounds():
+    t = _raw([TraceJob("a", 0.0, 1e-3, 1, 0), TraceJob("b", 1.0, 1e9, 1, 0)])
+    c = t.clamp_durations(30.0, 3600.0)
+    assert c.jobs[0].duration == 30.0 and c.jobs[1].duration == 3600.0
+
+
+def test_rescale_slots_preserves_ordering_and_caps_peak():
+    t = _raw([TraceJob("a", 0.0, 10.0, 100, 0),
+              TraceJob("b", 1.0, 10.0, 10, 0),
+              TraceJob("c", 2.0, 10.0, 1, 0)])
+    r = t.rescale_slots(64, max_fraction=0.5)
+    slots = {j.job_id: j.slots for j in r}
+    assert slots["a"] == 32                     # peak -> 50% of cluster
+    assert slots["c"] >= 1                      # floor
+    assert slots["a"] > slots["b"] > slots["c"]
+
+
+def test_bucket_priorities_two_classes():
+    t = _raw([TraceJob(f"j{i}", float(i), 10.0, 1, i) for i in range(10)])
+    b = t.bucket_priorities(high_fraction=0.3)
+    prios = [j.priority for j in b]
+    assert set(prios) <= {LOW_PRIORITY, HIGH_PRIORITY}
+    high = prios.count(HIGH_PRIORITY)
+    assert 1 <= high <= 5                       # ~30% of 10, quantile-rounded
+
+
+def test_bucket_priorities_full_fraction_all_high():
+    t = _raw([TraceJob("a", 0.0, 10.0, 1, 0), TraceJob("b", 1.0, 10.0, 1, 5)])
+    assert all(j.priority == HIGH_PRIORITY
+               for j in t.bucket_priorities(high_fraction=1.0))
+
+
+def test_bucket_priorities_degenerate_all_low():
+    t = _raw([TraceJob(f"j{i}", float(i), 10.0, 1, 4) for i in range(5)])
+    assert all(j.priority == LOW_PRIORITY
+               for j in t.bucket_priorities(high_fraction=0.3))
+
+
+# ---------------------------------------------------------------------------
+# synthetic generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", sorted(GENERATORS))
+def test_generators_seeded_deterministic(kind):
+    a = generate(kind, n_jobs=20, seed=5)
+    b = generate(kind, n_jobs=20, seed=5)
+    assert a == b
+    assert generate(kind, n_jobs=20, seed=6) != a
+    assert len(a) == 20
+    arr = a.arrivals()
+    assert arr == sorted(arr) and arr[0] >= 0.0
+    assert all(j.slots >= 1 and j.duration > 0.0 for j in a)
+
+
+def test_arrival_shapes_are_discriminated_by_stats():
+    uni = characterize(uniform_trace(n_jobs=40, seed=3))
+    bur = characterize(bursty_trace(n_jobs=40, seed=3))
+    assert uni.interarrival_cv == pytest.approx(0.0, abs=1e-9)
+    assert uni.burstiness == pytest.approx(-1.0)
+    assert bur.interarrival_cv > 1.0            # MMPP is overdispersed
+    assert bur.burstiness > 0.0
+    assert bur.peak_rate_ratio > uni.peak_rate_ratio
+
+
+def test_heavy_tail_has_low_hill_index():
+    heavy = characterize(heavy_tail_trace(n_jobs=60, seed=3))
+    light = characterize(uniform_trace(n_jobs=60, seed=3))
+    assert heavy.tail_index < 2.0               # elephants dominate
+    assert light.tail_index > heavy.tail_index
+
+
+def test_hill_estimator_recovers_known_alpha():
+    import numpy as np
+    rng = np.random.default_rng(0)
+    x = 1.0 + rng.pareto(1.5, size=4000)
+    assert hill_tail_index(x) == pytest.approx(1.5, rel=0.25)
+    assert hill_tail_index([3.0, 3.0, 3.0, 3.0, 3.0]) == math.inf
+
+
+# ---------------------------------------------------------------------------
+# replay compilation
+# ---------------------------------------------------------------------------
+
+def test_compile_job_brackets_natural_size():
+    cfg = ReplayConfig(cluster_slots=64, elasticity=2.0)
+    spec, wl = compile_job(TraceJob("j", 12.0, 300.0, 8, 5), cfg)
+    assert spec.min_replicas == 4 and spec.max_replicas == 16
+    assert spec.submit_time == 12.0
+    assert wl.total_work == 300.0
+    # the observed point is reproduced exactly: 1 s/step at natural size
+    assert wl.scaling.time_per_step(8) == pytest.approx(1.0)
+    assert wl.scaling.time_per_step(4) > wl.scaling.time_per_step(16)
+
+
+def test_compile_clamps_to_cluster():
+    cfg = ReplayConfig(cluster_slots=16, elasticity=4.0)
+    spec, _ = compile_job(TraceJob("j", 0.0, 60.0, 64, 1), cfg)
+    assert spec.max_replicas <= 16
+    assert 1 <= spec.min_replicas <= spec.max_replicas
+
+
+def test_replay_variant_completes_trace():
+    trace = uniform_trace(n_jobs=8, seed=2, duration_median=120.0,
+                          slot_median=4.0).normalized(32)
+    cfg = ReplayConfig(cluster_slots=32)
+    for variant in ("rigid", "rigid_max", "moldable", "elastic"):
+        m = replay_variant(trace, variant, cfg)
+        assert m.dropped_jobs == 0, variant
+        assert m.total_time > 0.0 and 0.0 < m.utilization <= 1.0
+
+
+def test_replay_rigid_runs_at_observed_request():
+    trace = _raw([TraceJob("solo", 0.0, 100.0, 5, 1)])
+    cfg = ReplayConfig(cluster_slots=32)
+    pairs = compile_trace(trace, cfg)
+    sim = Simulator(32, PolicyConfig(rescale_gap=180.0))
+    spec = pairs[0][0].rigid(5)
+    sim.submit(spec, pairs[0][1])
+    m = sim.run()
+    # 100 steps at 1 s/step at the natural size: runtime reproduced exactly
+    assert sim.cluster.jobs["solo"].end_time == pytest.approx(100.0)
+    assert m.rescale_count == 0
+
+
+def test_replay_cloud_autoscaled_completes_and_bills():
+    trace = bursty_trace(n_jobs=10, seed=4, duration_median=200.0,
+                         slot_median=4.0).normalized(32)
+    prov = CloudProvider([NodePool("od", slots_per_node=8, boot_latency=60.0,
+                                   teardown_delay=10.0, initial_nodes=1,
+                                   max_nodes=4)])
+    asc = NodeAutoscaler(prov, AutoscalerConfig(
+        tick_interval=20.0, scale_up_cooldown=20.0, scale_down_cooldown=60.0,
+        idle_timeout=120.0, headroom_slots=8))
+    sim = replay_cloud(trace, ReplayConfig(cluster_slots=32), prov,
+                       variant="elastic", autoscaler=asc)
+    assert sim.metrics.dropped_jobs == 0
+    assert sim.metrics.total_cost > 0.0
+    assert asc.scale_ups >= 1                   # the burst forced provisioning
+    assert all(j.status is JobStatus.COMPLETED
+               for j in sim.cluster.jobs.values())
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: arrival order is insertion-agnostic
+# ---------------------------------------------------------------------------
+
+def _metrics_for_order(pairs, order):
+    sim = Simulator(16, PolicyConfig(rescale_gap=60.0))
+    for i in order:
+        sim.submit(*pairs[i])
+    m = sim.run()
+    ends = {j.job_id: j.end_time for j in sim.cluster.jobs.values()}
+    return m, ends
+
+
+def test_submit_order_does_not_change_schedule():
+    """Bursty traces collapse arrivals onto shared timestamps; the schedule
+    must depend on (submit_time, priority, job_id), never on the order
+    submit() happened to be called in."""
+    trace = _raw([
+        TraceJob("a", 0.0, 50.0, 4, 1), TraceJob("b", 0.0, 50.0, 4, 5),
+        TraceJob("c", 0.0, 80.0, 8, 3), TraceJob("d", 120.0, 50.0, 4, 2),
+        TraceJob("e", 120.0, 30.0, 8, 2),
+    ])
+    pairs = compile_trace(trace, ReplayConfig(cluster_slots=16))
+    m0, ends0 = _metrics_for_order(pairs, [0, 1, 2, 3, 4])
+    for order in ([4, 3, 2, 1, 0], [2, 0, 4, 1, 3]):
+        m, ends = _metrics_for_order(pairs, order)
+        assert ends == ends0
+        assert m.weighted_mean_completion == pytest.approx(
+            m0.weighted_mean_completion)
+        assert m.utilization == pytest.approx(m0.utilization)
+
+
+def test_same_time_arrivals_process_priority_desc():
+    trace = _raw([TraceJob("lo", 0.0, 100.0, 16, 1),
+                  TraceJob("hi", 0.0, 100.0, 16, 5)])
+    pairs = compile_trace(trace, ReplayConfig(cluster_slots=16,
+                                              elasticity=1.0))
+    # submit the low-priority job FIRST; the high one must still win the
+    # single 16-slot block because ties process priority-desc
+    sim = Simulator(16, PolicyConfig(rescale_gap=60.0))
+    for spec, wl in pairs:
+        sim.submit(spec, wl)
+    sim.run()
+    jobs = sim.cluster.jobs
+    assert jobs["hi"].start_time == pytest.approx(0.0)
+    assert jobs["lo"].start_time > jobs["hi"].start_time
