@@ -17,6 +17,7 @@ MODULES = [
     ("table2", "benchmarks.table2_cloud_cost"),
     ("table3", "benchmarks.table3_placement"),
     ("table4", "benchmarks.table4_traces"),
+    ("table5", "benchmarks.table5_zones"),
     ("roofline", "benchmarks.roofline"),
 ]
 

@@ -1,0 +1,180 @@
+"""Table 5 (beyond-paper) — correlated zone reclaims x placement strategy.
+
+Real spot markets do not reclaim nodes independently: capacity crunches hit a
+whole availability zone at once (cf. Kub, arXiv:2410.10655).  This grid
+replays bursty (MMPP) and heavy-tailed traces through a THREE-ZONE,
+TWO-REGION cloud and sweeps the correlated-reclaim severity against the
+placement strategy:
+
+- ``pack``         zone-oblivious: fill the fullest node first.  A job tends
+                   to sit entirely inside one zone, so one zone reclaim takes
+                   its whole allocation (checkpoint-preempt, full restart).
+- ``zone_spread``  balance each job's slots across zones: a zone reclaim
+                   takes at most ~1/zones of the job, which an elastic
+                   shrink absorbs in place.
+
+Severity sweeps the per-zone Poisson reclaim stream: ``calm`` disables it
+(independent per-node fates only), ``mild`` reclaims half a zone's UP spot
+nodes roughly twice per run, ``severe`` wipes whole zones more often.
+
+Columns per cell: WMCT, blast radius (displaced slots per victim job per
+kill), checkpoint-preemptions per kill, dollars (total / idle / inter-region
+checkpoint transfer — a job preempted in region east and resumed on
+replacement capacity in west drags its checkpoint across the boundary),
+zone-reclaim event count, and dropped jobs.
+
+Verdict (PASS/FAIL): under every correlated severity and on both workload
+shapes, ``zone_spread`` beats ``pack`` on kill blast radius AND on weighted
+mean completion time, with no dropped jobs; the dollar delta (diversification
+is not free: spread capacity idles a little longer and west is pricier) is
+quantified in the verdict row rather than gated.
+"""
+import time
+
+if __package__ in (None, ""):       # `python benchmarks/table5_zones.py`
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit, kv
+from repro.cloud import (SPOT, AutoscalerConfig, CloudProvider, NodeAutoscaler,
+                         NodePool)
+from repro.workloads import ReplayConfig, generate, replay_cloud
+
+CLUSTER_SLOTS = 48
+SLOTS_PER_NODE = 8
+PRICE_OD = 0.048
+PRICE_SPOT = 0.016
+# sustained concurrency is what makes placement discriminate (several jobs
+# resident per node); a short sparse stream parks one job per node and both
+# strategies produce the same blasts
+N_JOBS = 24
+DURATION_MEDIAN = 900.0
+SEEDS = (5, 13, 29, 41, 57)
+WORKLOADS = ("bursty", "heavy_tail")
+PLACEMENTS = ("pack", "zone_spread")
+
+#: (zone_reclaim_interval s, fraction of the zone's UP spot nodes per event)
+SEVERITIES = {
+    "calm": (None, 0.5),        # independent per-node churn only
+    "mild": (1200.0, 0.5),
+    "severe": (900.0, 1.0),     # whole-zone wipes, a few per run
+}
+
+
+def _provider(severity: str, seed: int) -> CloudProvider:
+    interval, fraction = SEVERITIES[severity]
+    pools = [
+        # on-demand anchor in east: survives every reclaim, holds the queue
+        NodePool("od-east", slots_per_node=SLOTS_PER_NODE,
+                 price_per_slot_hour=PRICE_OD, boot_latency=120.0,
+                 teardown_delay=30.0, initial_nodes=1, max_nodes=2,
+                 region="east", zone="east-1a"),
+    ]
+    for region, zone, init in (("east", "east-1a", 1), ("east", "east-1b", 1),
+                               ("west", "west-2a", 1)):
+        # 300 s spot boots: during a capacity crunch replacement spot is NOT
+        # back in 90 s — the window in which a checkpoint-preempted (pack)
+        # job sits queued while a shrunk (zone_spread) job keeps running
+        pools.append(NodePool(
+            f"spot-{zone}", slots_per_node=SLOTS_PER_NODE,
+            price_per_slot_hour=PRICE_SPOT, market=SPOT, boot_latency=300.0,
+            teardown_delay=30.0, initial_nodes=init, max_nodes=3,
+            spot_lifetime_mean=7200.0, region=region, zone=zone))
+    return CloudProvider(
+        pools, seed=seed,
+        region_price_multipliers={"east": 1.0, "west": 1.08},
+        zone_reclaim_interval=interval, zone_reclaim_fraction=fraction,
+        transfer_price_per_gb=0.02)
+
+
+def run_cell(trace, severity: str, placement: str, seed: int):
+    prov = _provider(severity, seed)
+    # headroom keeps jobs running ABOVE min_replicas: shrink-absorbing a
+    # zone's worth of a job needs headroom between its current size and its
+    # floor, and a scarcity-tuned fleet (everyone at min) has none
+    asc = NodeAutoscaler(prov, AutoscalerConfig(
+        tick_interval=30.0, scale_up_cooldown=30.0, scale_down_cooldown=120.0,
+        idle_timeout=240.0, spot_fraction=0.75, headroom_slots=12))
+    # elasticity 1.5 keeps min_replicas at ~2/3 of the natural size: losing
+    # a third of a job (its zone-spread share of one zone) is absorbable in
+    # place, losing its whole packed allocation is not — which is exactly
+    # the shrink-vs-preempt trade-off the placement strategies differ on.
+    # 2 GB/slot of checkpoint state makes that trade-off bite: preemption
+    # checkpoints go to DISK (10x slower than the in-memory rescale path),
+    # so a full-loss preempt costs ~10x a shrink-absorb
+    cfg = ReplayConfig(cluster_slots=CLUSTER_SLOTS, elasticity=1.5,
+                       bytes_per_slot=2.0e9)
+    sim = replay_cloud(trace, cfg, prov, variant="elastic", autoscaler=asc,
+                       placement=placement)
+    return sim.metrics
+
+
+def _mean(xs):
+    return sum(xs) / len(xs)
+
+
+def run():
+    agg = {}
+    for severity in SEVERITIES:
+        for placement in PLACEMENTS:
+            cells = []
+            t0 = time.perf_counter()
+            for wname in WORKLOADS:
+                for seed in SEEDS:
+                    kw = ({"duration_scale": DURATION_MEDIAN / 2}
+                          if wname == "heavy_tail"
+                          else {"duration_median": DURATION_MEDIAN})
+                    # max_fraction 0.2 keeps the largest job near ONE node's
+                    # worth of slots: placement only discriminates when
+                    # several jobs share a node (a cluster-half-sized job
+                    # blankets every node under either strategy)
+                    trace = generate(wname, n_jobs=N_JOBS, seed=seed,
+                                     **kw).normalized(CLUSTER_SLOTS,
+                                                      max_fraction=0.2)
+                    cells.append(run_cell(trace, severity, placement, seed))
+            us = (time.perf_counter() - t0) * 1e6 / len(cells)
+            agg[(severity, placement)] = a = dict(
+                wmct=_mean([m.weighted_mean_completion for m in cells]),
+                blast=_mean([m.zone_blast_radius for m in cells]),
+                node_blast=_mean([m.kill_blast_radius for m in cells]),
+                preempts=_mean([m.zone_preemptions for m in cells]),
+                cost=_mean([m.total_cost for m in cells]),
+                idle=_mean([m.idle_cost for m in cells]),
+                xfer=_mean([m.transfer_cost for m in cells]),
+                reclaims=_mean([m.zone_reclaims for m in cells]),
+                kills=_mean([m.spot_preemptions for m in cells]),
+                dropped=sum(m.dropped_jobs for m in cells),
+            )
+            emit(f"table5.{severity}.{placement}", us, kv(
+                wmct=a["wmct"], blast=a["blast"],
+                node_blast=a["node_blast"], preempts=a["preempts"],
+                cost=a["cost"], idle=a["idle"], xfer=a["xfer"],
+                zone_reclaims=a["reclaims"], kills=a["kills"],
+                dropped=a["dropped"]))
+
+    # verdict: under EVERY correlated severity, zone_spread shrinks the blast
+    # radius and the WMCT vs zone-oblivious pack; the dollar delta is
+    # reported, not gated (diversification costs a few idle/west cents)
+    all_ok = True
+    for severity in ("mild", "severe"):
+        pack = agg[(severity, "pack")]
+        zs = agg[(severity, "zone_spread")]
+        ok = (zs["blast"] < pack["blast"] and zs["wmct"] < pack["wmct"]
+              and pack["dropped"] == 0 and zs["dropped"] == 0)
+        all_ok &= ok
+        emit(f"table5.verdict.{severity}", 0.0, kv(
+            "PASS" if ok else "FAIL",
+            blast_zone_spread=zs["blast"], blast_pack=pack["blast"],
+            wmct_zone_spread=zs["wmct"], wmct_pack=pack["wmct"],
+            cost_delta=zs["cost"] - pack["cost"],
+            xfer_zone_spread=zs["xfer"], xfer_pack=pack["xfer"]))
+    emit("table5.verdict.zone_spread_absorbs_correlated_reclaims", 0.0,
+         "PASS" if all_ok else "FAIL")
+    return agg
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

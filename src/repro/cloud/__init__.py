@@ -6,10 +6,10 @@ from repro.cloud.cost import CostAccountant, CostReport
 from repro.cloud.node_autoscaler import AutoscalerConfig, NodeAutoscaler
 from repro.cloud.provider import (ON_DEMAND, SPOT, CloudProvider, Node,
                                   NodePool, NodeState)
-from repro.cloud.sim import CloudSimulator
+from repro.cloud.sim import CloudSimulator, KillBlast
 
 __all__ = [
     "CostAccountant", "CostReport", "AutoscalerConfig", "NodeAutoscaler",
     "ON_DEMAND", "SPOT", "CloudProvider", "Node", "NodePool", "NodeState",
-    "CloudSimulator",
+    "CloudSimulator", "KillBlast",
 ]

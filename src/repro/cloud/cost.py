@@ -5,11 +5,17 @@ simulator calls :meth:`advance` at every state-change boundary *before*
 applying the change, so each elapsed interval is integrated under the rates
 that actually held during it:
 
-- total cost:  sum over billed nodes of slots x $/slot-hour
+- total cost:  sum over billed nodes of slots x $/slot-hour, plus any
+               inter-region transfer dollars
 - used cost:   running-job slots x the capacity-weighted mean price of the
                currently billed capacity (blended rate)
-- idle cost:   total - used  (wasted-idle dollars: provisioned, not running)
+- idle cost:   capacity total - used  (wasted-idle dollars: provisioned, not
+               running; transfer dollars are neither idle nor used capacity)
 - job cost:    each job's replicas x blended rate, accumulated over its life
+- transfer:    $/GB for checkpoint data restored in a different REGION than
+               it was written in (a preempted job resuming across a region
+               boundary drags its checkpoint over the wire; intra-region
+               restores are free) — itemized separately and per job
 
 Attribution note: the counting simulator does not pin jobs to nodes, so jobs
 pay the *blended* $/slot-hour of whatever capacity mix is live — a job running
@@ -26,22 +32,28 @@ from repro.core.job import JobState
 
 @dataclass(frozen=True)
 class CostReport:
-    total_cost: float               # $ billed across all nodes
+    total_cost: float               # $ billed: node capacity + transfer
     used_cost: float                # $ attributed to running job slots
     idle_cost: float                # $ of provisioned-but-unused slot time
     node_hours: float               # billed node-hours
     slot_hours: float               # billed slot-hours
-    job_costs: Dict[str, float]     # job_id -> $ attributed
+    job_costs: Dict[str, float]     # job_id -> capacity $ attributed
     spot_preemptions: int           # nodes reclaimed by the spot market
+    transfer_cost: float = 0.0      # $ of inter-region checkpoint transfer
+    transfer_costs: Dict[str, float] = field(default_factory=dict)  # per job
 
     @property
     def idle_fraction(self) -> float:
-        return self.idle_cost / self.total_cost if self.total_cost else 0.0
+        """Share of CAPACITY dollars wasted idle — transfer spend is not
+        capacity and must not dilute the denominator."""
+        capacity = self.used_cost + self.idle_cost
+        return self.idle_cost / capacity if capacity else 0.0
 
     def row(self) -> str:
         return (f"cost=${self.total_cost:8.4f} idle=${self.idle_cost:8.4f} "
                 f"({self.idle_fraction:6.2%}) node_h={self.node_hours:6.2f} "
-                f"spot_kills={self.spot_preemptions}")
+                f"spot_kills={self.spot_preemptions} "
+                f"xfer=${self.transfer_cost:7.4f}")
 
 
 class CostAccountant:
@@ -57,6 +69,8 @@ class CostAccountant:
         self.slot_seconds = 0.0
         self.job_costs: Dict[str, float] = defaultdict(float)
         self.spot_preemptions = 0
+        self.transfer_cost = 0.0
+        self.transfer_costs: Dict[str, float] = defaultdict(float)
 
     # -- integration ---------------------------------------------------------
     def advance(self, now: float) -> None:
@@ -86,7 +100,8 @@ class CostAccountant:
 
     def spend_through(self, now: float) -> float:
         """Projected total spend at ``now`` without mutating state."""
-        return self.total_cost + self._dollars_per_s * max(0.0, now - self._now)
+        return (self.total_cost + self.transfer_cost
+                + self._dollars_per_s * max(0.0, now - self._now))
 
     # -- state changes (apply AFTER advance) ---------------------------------
     def node_up(self, node) -> None:
@@ -106,14 +121,25 @@ class CostAccountant:
     def set_allocations(self, running_jobs: Iterable[JobState]) -> None:
         self._job_alloc = {j.job_id: j.replicas for j in running_jobs}
 
+    def bill_transfer(self, job_id: str, data_bytes: float,
+                      price_per_gb: float) -> float:
+        """Bill one inter-region checkpoint restore: the job's checkpoint
+        footprint crosses a region boundary at ``price_per_gb``."""
+        dollars = data_bytes / 1e9 * price_per_gb
+        self.transfer_cost += dollars
+        self.transfer_costs[job_id] += dollars
+        return dollars
+
     # -- reporting -----------------------------------------------------------
     def report(self) -> CostReport:
         return CostReport(
-            total_cost=self.total_cost,
+            total_cost=self.total_cost + self.transfer_cost,
             used_cost=self.used_cost,
             idle_cost=max(0.0, self.total_cost - self.used_cost),
             node_hours=self.node_seconds / 3600.0,
             slot_hours=self.slot_seconds / 3600.0,
             job_costs=dict(self.job_costs),
             spot_preemptions=self.spot_preemptions,
+            transfer_cost=self.transfer_cost,
+            transfer_costs=dict(self.transfer_costs),
         )

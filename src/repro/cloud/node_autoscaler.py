@@ -9,7 +9,14 @@ capacity, while the autoscaler decides how much capacity to pay for.
 Scale-up:   unmet demand = queued min_replicas + headroom - free - booting.
             Provision when positive, at most every ``scale_up_cooldown`` s,
             never past ``budget_cap`` dollars, preferring spot pools while
-            their share of provisioned slots is below ``spot_fraction``.
+            their ZONE's share of provisioned slots is below its per-zone
+            quota (``spot_fraction`` split evenly across spot zones), least-
+            saturated zone first — correlated zone reclaims make spot
+            concentration in one zone the expensive failure mode, so the
+            share check that used to be global is counted per zone (a global
+            check would keep over-provisioning the one cheapest zone until
+            the GLOBAL share hit target, parking the whole spot fleet in a
+            single blast domain).
 Scale-down: only after the cluster has been continuously idle enough to free
             a whole node for ``idle_timeout`` s AND ``scale_down_cooldown``
             has passed since the last release (hysteresis against thrash).
@@ -167,18 +174,38 @@ class NodeAutoscaler:
         return provisioned
 
     def _pool_preference(self) -> List[NodePool]:
-        """Spot pools first while the provisioned spot share is below target,
-        then by ascending $/slot-hour within each market."""
+        """Zone-aware spot preference: a spot pool comes first while its
+        zone's share of ALL provisioned slots is below the per-zone quota
+        ``spot_fraction / n_spot_zones``, least-saturated (then cheapest)
+        zone first, so provisioning diversifies across blast domains instead
+        of draining the single cheapest pool.  On-demand pools follow by
+        ascending $/slot-hour; quota-filled spot pools come last.  With one
+        spot zone this reduces exactly to the old global share check."""
         pools = sorted(self.provider.pools.values(),
                        key=lambda p: p.price_per_slot_hour)
         spot = [p for p in pools if p.market == SPOT]
         on_demand = [p for p in pools if p.market != SPOT]
         total = self.provider.market_slots(SPOT) + \
             self.provider.market_slots(ON_DEMAND)
-        share = self.provider.market_slots(SPOT) / total if total else 0.0
-        if spot and share < self.cfg.spot_fraction:
-            return spot + on_demand
-        return on_demand + spot
+        spot_share = self.provider.market_slots(SPOT) / total if total else 0.0
+        # quota splits over zones that can still GROW: a zone whose pools sit
+        # at max_nodes must not strand its slice of the configured spot share
+        # (the global gate keeps the redistribution from overshooting it)
+        open_zones = {p.zone for p in spot
+                      if self.provider.pool_census(p.name) < p.max_nodes}
+        quota = self.cfg.spot_fraction / max(1, len(open_zones))
+
+        def zone_share(pool: NodePool) -> float:
+            return (self.provider.zone_slots(pool.zone, SPOT) / total
+                    if total else 0.0)
+        preferred = sorted(
+            (p for p in spot
+             if p.zone in open_zones
+             and spot_share < self.cfg.spot_fraction
+             and zone_share(p) < quota),
+            key=lambda p: (zone_share(p), p.price_per_slot_hour))
+        saturated = [p for p in spot if p not in preferred]
+        return preferred + on_demand + saturated
 
     # -- scale-down ----------------------------------------------------------
     def _removable(self, cluster) -> Optional[Node]:

@@ -5,9 +5,26 @@ The provider owns *node lifecycle* only; it never touches the scheduler.  It
 communicates with the simulator exclusively by pushing events into the shared
 :class:`~repro.core.events.EventQueue`:
 
-    request_node()  --boot_latency-->   "node_up"     (capacity attaches)
-    release_node()  --teardown_delay--> "node_down"   (billing stops)
-    spot fate drawn at request time --> "spot_kill"   (capacity yanked NOW)
+    request_node()  --boot_latency-->   "node_up"       (capacity attaches)
+    release_node()  --teardown_delay--> "node_down"     (billing stops)
+    spot fate drawn at request time --> "spot_kill"     (capacity yanked NOW)
+    Poisson process per zone        --> "zone_reclaim"  (correlated burst)
+
+Topology: every pool lives in a ``region``/``zone`` (zone names are globally
+unique, AWS-style ``us-east-1a``).  Regions price capacity differently —
+``region_price_multipliers`` scales each pool's ``price_per_slot_hour`` at
+registration — and checkpoint data crossing a region boundary on restore is
+billed at ``transfer_price_per_gb`` (see CostAccountant).
+
+Spot reclaims happen at two scales, layered:
+
+- *independent*: each spot node keeps its private Exp(mean) lifetime fate,
+  drawn at request time (the background churn of one market);
+- *correlated*: when ``zone_reclaim_interval`` is set, each zone hosting
+  spot capacity carries a memoryless Poisson event stream; every event
+  reclaims ``zone_reclaim_fraction`` of that zone's UP spot nodes AT ONCE
+  (the capacity crunch real clouds exhibit — cf. Kub, arXiv:2410.10655).
+  On-demand nodes and other zones are bystanders by construction.
 
 Billing semantics (documented in README §Cloud): a node is billed from the
 moment it comes UP until it goes DOWN (normal teardown or spot kill).  Boot
@@ -18,7 +35,9 @@ which is exactly the wasted-teardown money a real cluster pays.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
+import math
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Dict, Iterable, List, Optional, Tuple
@@ -40,7 +59,8 @@ class NodeState(Enum):
 
 @dataclass(frozen=True)
 class NodePool:
-    """One instance type / market combination (e.g. c5.2xlarge on-demand)."""
+    """One instance type / market / zone combination (e.g. c5.2xlarge
+    on-demand in us-east-1a)."""
     name: str
     slots_per_node: int = 8
     price_per_slot_hour: float = 0.048     # $/slot-hour (~c5.2xlarge / 8 vCPU)
@@ -52,6 +72,10 @@ class NodePool:
     # spot only: mean node lifetime before the market reclaims it; the fate
     # is drawn once per node from Exp(mean) at request time (memoryless)
     spot_lifetime_mean: float = 3600.0
+    # topology: zone names are globally unique (AWS-style "us-east-1a"), so
+    # the zone alone identifies a correlated-reclaim blast domain
+    region: str = "default"
+    zone: str = "default-a"
 
     def __post_init__(self):
         assert self.market in (ON_DEMAND, SPOT), self.market
@@ -88,11 +112,42 @@ class CloudProvider:
     """Node pools + lifecycle.  All state transitions are driven by the
     simulator popping the events this class pushes."""
 
-    def __init__(self, pools: Iterable[NodePool], seed: int = 0):
-        self.pools: Dict[str, NodePool] = {p.name: p for p in pools}
+    def __init__(self, pools: Iterable[NodePool], seed: int = 0, *,
+                 region_price_multipliers: Optional[Dict[str, float]] = None,
+                 zone_reclaim_interval: Optional[float] = None,
+                 zone_reclaim_fraction: float = 0.5,
+                 transfer_price_per_gb: float = 0.02):
+        # fold the region multiplier into each pool's price at registration
+        # so every downstream consumer (billing, autoscaler preference,
+        # budget commitment) sees the regionally-adjusted rate for free
+        mult = region_price_multipliers or {}
+        self.pools: Dict[str, NodePool] = {
+            p.name: dataclasses.replace(
+                p, price_per_slot_hour=(p.price_per_slot_hour
+                                        * mult.get(p.region, 1.0)))
+            for p in pools}
         self.nodes: Dict[str, Node] = {}
         self._ids = itertools.count()
         self.rng = np.random.default_rng(seed)
+        #: mean seconds between correlated reclaim events PER ZONE hosting
+        #: spot capacity (None disables the process); each event reclaims
+        #: ceil(fraction * UP spot nodes) of that zone at once
+        self.zone_reclaim_interval = zone_reclaim_interval
+        self.zone_reclaim_fraction = zone_reclaim_fraction
+        assert 0.0 < zone_reclaim_fraction <= 1.0, zone_reclaim_fraction
+        #: $/GB billed when a checkpoint is restored in a different REGION
+        #: than it was written in (intra-region restores are free)
+        self.transfer_price_per_gb = transfer_price_per_gb
+        # when the Poisson stream fires next, per zone: an injected
+        # (deterministic) reclaim event landing BEFORE it must not re-arm,
+        # or the zone ends up with two live streams at double the rate
+        self._next_fire: Dict[str, float] = {}
+
+    def region_of(self, node_id: str) -> str:
+        return self.nodes[node_id].pool.region
+
+    def zone_of(self, node_id: str) -> str:
+        return self.nodes[node_id].pool.zone
 
     # -- queries -------------------------------------------------------------
     def nodes_in(self, *states: NodeState) -> List[Node]:
@@ -121,6 +176,19 @@ class CloudProvider:
         return sum(n.slots for n in self.nodes.values()
                    if n.pool.market == market and n.state in (
                        NodeState.PROVISIONING, NodeState.UP))
+
+    def spot_zones(self) -> List[str]:
+        """Zones hosting spot pools — the correlated-reclaim blast domains."""
+        return sorted({p.zone for p in self.pools.values()
+                       if p.market == SPOT})
+
+    def zone_slots(self, zone: str, market: Optional[str] = None) -> int:
+        """Provisioned (booting + UP) slots in a zone, optionally by market
+        — the autoscaler's per-zone spot-share denominator/numerator."""
+        return sum(n.slots for n in self.nodes.values()
+                   if n.pool.zone == zone
+                   and (market is None or n.pool.market == market)
+                   and n.state in (NodeState.PROVISIONING, NodeState.UP))
 
     # -- lifecycle -----------------------------------------------------------
     def bootstrap(self, queue: EventQueue) -> List[Node]:
@@ -198,6 +266,51 @@ class CloudProvider:
         """Deterministic kill for tests/demos (bypasses the Exp(mean) draw)."""
         self.nodes[node_id].kill_at = t
         queue.push(t, "spot_kill", node_id)
+
+    # -- correlated zone reclaims --------------------------------------------
+    def schedule_zone_reclaims(self, queue: EventQueue) -> None:
+        """Arm each spot zone's Poisson reclaim stream (first arrival per
+        zone).  No-op unless ``zone_reclaim_interval`` is configured."""
+        if self.zone_reclaim_interval is None:
+            return
+        for zone in self.spot_zones():
+            self._push_next_zone_reclaim(zone, 0.0, queue)
+
+    def _push_next_zone_reclaim(self, zone: str, now: float,
+                                queue: EventQueue) -> None:
+        t = now + float(self.rng.exponential(self.zone_reclaim_interval))
+        self._next_fire[zone] = t
+        queue.push(t, "zone_reclaim", zone)
+
+    def on_zone_reclaim(self, zone: str, now: float,
+                        queue: EventQueue) -> List[str]:
+        """One correlated reclaim event: pick ceil(fraction x UP spot nodes)
+        victims in the zone and re-arm the stream (memoryless).  Returns the
+        victim node ids; the caller replays each through the node-exact
+        spot-kill path, so on-demand nodes and other zones are bystanders by
+        construction."""
+        up = sorted(n.node_id for n in self.nodes.values()
+                    if n.state is NodeState.UP and n.pool.market == SPOT
+                    and n.pool.zone == zone)
+        victims: List[str] = []
+        if up:
+            k = math.ceil(self.zone_reclaim_fraction * len(up))
+            picked = self.rng.choice(len(up), size=k, replace=False)
+            victims = [up[i] for i in sorted(picked)]
+        # re-arm only when THIS event is the armed stream's own firing — an
+        # injected event (arriving ahead of the pending stream event, or on
+        # a zone that was never armed at all) must not start a new stream
+        if (self.zone_reclaim_interval is not None
+                and zone in self._next_fire
+                and now >= self._next_fire[zone]):
+            self._push_next_zone_reclaim(zone, now, queue)
+        return victims
+
+    def inject_zone_reclaim(self, zone: str, t: float,
+                            queue: EventQueue) -> None:
+        """Deterministic correlated reclaim for tests/demos (the event still
+        draws its victims via ``zone_reclaim_fraction``)."""
+        queue.push(t, "zone_reclaim", zone)
 
     # -- internals -----------------------------------------------------------
     def _new_node(self, pool: NodePool, now: float,

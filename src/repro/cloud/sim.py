@@ -1,7 +1,7 @@
 """Discrete-event simulator over a :class:`CloudProvider`: dynamic capacity,
 spot preemption, node autoscaling, and cost accounting.
 
-Extends :class:`repro.core.simulator.Simulator` with four event kinds:
+Extends :class:`repro.core.simulator.Simulator` with five event kinds:
 
 - ``node_up``        capacity attaches; queued jobs get a Fig.-3 offer pass
 - ``node_down``      a drained node's billing stops
@@ -13,7 +13,19 @@ Extends :class:`repro.core.simulator.Simulator` with four event kinds:
                      to-disk preempt via the same ``Actions.preempt`` path
                      PreemptingPolicy uses (victims requeue and later resume
                      with progress intact)
+- ``zone_reclaim``   a correlated burst: the provider picks a fraction of a
+                     zone's UP spot nodes and this sim replays them as a
+                     BATCH of node-exact kills — every victim node is
+                     cordoned up front (one event, one blast domain), so a
+                     displaced worker is never migrated onto a node dying in
+                     the same burst; on-demand nodes and other zones are
+                     bystanders
 - ``autoscale_tick`` the NodeAutoscaler evaluates queue pressure / idleness
+
+Region awareness rides on the preempt/resume path: a checkpoint written by a
+preempted job remembers its region (the region hosting the plurality of its
+slots), and a resume whose new home is in a DIFFERENT region bills the
+checkpoint footprint as inter-region transfer (CostAccountant.bill_transfer).
 
 Scale-down is drain-aware: :meth:`CloudSimulator.begin_drain` cordons a node,
 migrates its residents onto free capacity elsewhere (each migrated job pays a
@@ -27,7 +39,7 @@ the previous boundary.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional
 
 from repro.cloud.cost import CostAccountant, CostReport
 from repro.cloud.node_autoscaler import NodeAutoscaler
@@ -35,7 +47,43 @@ from repro.cloud.provider import CloudProvider, NodeState
 from repro.core.job import JobSpec, JobStatus
 from repro.core.metrics import ScheduleMetrics
 from repro.core.policies import PolicyConfig
-from repro.core.simulator import Simulator, SimWorkload
+from repro.core.simulator import Simulator, SimWorkload, _SimActions
+
+
+class KillBlast(NamedTuple):
+    """Per effective spot kill: what one node's reclaim displaced.  A plain
+    tuple extension of the PR-2 (jobs, slots, preempts) record, so existing
+    index-based consumers keep working; ``zone`` attributes the kill to its
+    failure domain (correlated reclaims land many same-zone rows at one
+    timestamp)."""
+    jobs: int           # jobs displaced (the node's residents)
+    slots: int          # slots displaced
+    preempts: int       # of those jobs, how many were checkpoint-preempted
+    zone: str           # failure zone of the killed node
+
+
+class _CloudActions(_SimActions):
+    """Region-aware actions: remember where a preempted job's checkpoint was
+    written; bill inter-region transfer when it resumes elsewhere."""
+
+    def preempt(self, job) -> bool:
+        region = self.sim.job_region(job.job_id)    # before slots are freed
+        ok = super().preempt(job)
+        if ok and region is not None:
+            self.sim._ckpt_region[job.job_id] = region
+        return ok
+
+    def create(self, job, replicas: int) -> bool:
+        ok = super().create(job, replicas)
+        if ok:
+            src = self.sim._ckpt_region.pop(job.job_id, None)
+            dst = self.sim.job_region(job.job_id) if src is not None else None
+            if src is not None and dst is not None and dst != src:
+                wl = self.sim.workloads[job.job_id]
+                self.sim.accountant.bill_transfer(
+                    job.job_id, wl.data_bytes,
+                    self.sim.provider.transfer_price_per_gb)
+        return ok
 
 
 class CloudSimulator(Simulator):
@@ -49,16 +97,24 @@ class CloudSimulator(Simulator):
             self.policy = policy
         self.provider = provider
         self.autoscaler = autoscaler
+        self.actions = _CloudActions(self)  # region-aware preempt/resume
         self.accountant = CostAccountant()
         self.cost_report: Optional[CostReport] = None
         self.spot_victim_jobs = 0           # job preemptions caused by kills
         self.migrations = 0                 # jobs relocated off dying nodes
-        # per effective kill: (jobs displaced, slots displaced, preemptions)
-        self.kill_blasts: List[Tuple[int, int, int]] = []
+        self.zone_reclaims = 0              # correlated events that drew blood
+        self.kill_blasts: List[KillBlast] = []
+        # per correlated EVENT: union of the batch's displaced residents —
+        # the per-node rows in kill_blasts understate correlation (a job
+        # losing 2 slots on each of 3 dying nodes is one 6-slot casualty)
+        self.zone_blasts: List[KillBlast] = []
+        self._ckpt_region: Dict[str, str] = {}   # preempted job -> ckpt home
         self._expected_jobs = 0
         for node in provider.bootstrap(self.queue):
-            self.cluster.add_node(node.node_id, node.slots)
+            self.cluster.add_node(node.node_id, node.slots,
+                                  zone=node.pool.zone)
             self.accountant.node_up(node)
+        provider.schedule_zone_reclaims(self.queue)
         self.util.record_capacity(0.0, self.cluster.total_slots)
         if autoscaler is not None:
             self.queue.push(0.0, "autoscale_tick", None)
@@ -118,21 +174,42 @@ class CloudSimulator(Simulator):
         self.accountant.advance(self.now)
         self.cost_report = self.accountant.report()
         r = self.cost_report
-        kills = self.kill_blasts
-        if kills:
+
+        def _blast_stats(kills: List[KillBlast]):
+            if not kills:
+                return 0.0, 0.0, 0.0
             n = float(len(kills))
-            blast_jobs = sum(k[0] for k in kills) / n
             # damage concentration: displaced slots per victim job, averaged
-            # over kills (kills that hit an empty node contribute 0)
-            blast_radius = sum(k[1] / k[0] for k in kills if k[0]) / n
-            preempts = sum(k[2] for k in kills) / n
-        else:
-            blast_jobs = blast_radius = preempts = 0.0
+            # over kills (kills that hit empty nodes contribute 0)
+            return (sum(k.jobs for k in kills) / n,
+                    sum(k.slots / k.jobs for k in kills if k.jobs) / n,
+                    sum(k.preempts for k in kills) / n)
+        blast_jobs, blast_radius, preempts = _blast_stats(self.kill_blasts)
+        zb_jobs, _, zb_preempts = _blast_stats(self.zone_blasts)
+        # weighted, not mean-of-ratios: how many slots the average CASUALTY
+        # lost to a correlated event (events that only hit empty nodes carry
+        # no casualties and must not dilute the damage statistic)
+        zb_victims = sum(k.jobs for k in self.zone_blasts)
+        zb_radius = (sum(k.slots for k in self.zone_blasts) / zb_victims
+                     if zb_victims else 0.0)
         return dataclasses.replace(
             metrics, total_cost=r.total_cost, idle_cost=r.idle_cost,
             node_hours=r.node_hours, spot_preemptions=r.spot_preemptions,
+            transfer_cost=r.transfer_cost, zone_reclaims=self.zone_reclaims,
             kill_blast_jobs=blast_jobs, kill_blast_radius=blast_radius,
-            kill_preemptions=preempts)
+            kill_preemptions=preempts, zone_blast_jobs=zb_jobs,
+            zone_blast_radius=zb_radius, zone_preemptions=zb_preempts)
+
+    def job_region(self, job_id: str) -> Optional[str]:
+        """Region hosting the plurality of the job's slots (checkpoint home
+        for transfer billing); None while the job holds no slots."""
+        per: Dict[str, int] = {}
+        for nid, cnt in self.cluster.placement.job_nodes(job_id).items():
+            r = self.provider.region_of(nid)
+            per[r] = per.get(r, 0) + cnt
+        if not per:
+            return None
+        return max(sorted(per), key=lambda r: per[r])
 
     def decommission(self, node_id: str) -> bool:
         """Voluntarily release an EMPTY node (autoscaler scale-down).  The
@@ -205,6 +282,8 @@ class CloudSimulator(Simulator):
                 self.accountant.node_down(node)
         elif ev.kind == "spot_kill":
             self._on_spot_kill(ev.payload)
+        elif ev.kind == "zone_reclaim":
+            self._on_zone_reclaim(ev.payload)
         elif ev.kind == "autoscale_tick":
             self._on_autoscale_tick()
         else:
@@ -216,7 +295,7 @@ class CloudSimulator(Simulator):
             return                                # killed while booting
         self._record_util()                       # close interval at old rate
         self.accountant.node_up(node)
-        self.cluster.add_node(node.node_id, node.slots)
+        self.cluster.add_node(node.node_id, node.slots, zone=node.pool.zone)
         self._record_capacity()
         # fresh capacity is a completion-shaped opportunity: run the Fig. 3
         # redistribution so queued jobs start / running jobs expand
@@ -279,8 +358,9 @@ class CloudSimulator(Simulator):
         self.cluster.remove_node(node_id)
         assert self.cluster.overcommit <= pre_overcommit, \
             "spot eviction failed"
-        self.kill_blasts.append(
-            (len(victims), sum(victims.values()), preempted))
+        self.kill_blasts.append(KillBlast(
+            len(victims), sum(victims.values()), preempted,
+            self.provider.zone_of(node_id)))
         # surviving free capacity (shrinks may have overshot node granularity)
         # goes back through the redistribution pass; pass the real free count
         # so pseudocode-faithful configs (redistribute_idle=False) see it too
@@ -288,6 +368,32 @@ class CloudSimulator(Simulator):
         if free > 0:
             self.policy.on_job_complete(self.cluster, free, self.now,
                                         self.actions)
+
+    def _on_zone_reclaim(self, zone: str) -> None:
+        """One correlated reclaim: the provider picks the victims (and re-arms
+        the zone's Poisson stream); this sim replays them as a batch of
+        node-exact kills.  Cordoning the WHOLE blast set up front keeps the
+        per-node displacement honest: a worker migrated off one dying node is
+        never parked on another node dying in the same burst."""
+        victims = self.provider.on_zone_reclaim(zone, self.now, self.queue)
+        if not victims:
+            return
+        self.zone_reclaims += 1
+        # event-level blast set, captured BEFORE displacement: a preemption
+        # during the batch evicts the job everywhere, so later nodes' own
+        # resident maps would under-count what this event took from it
+        displaced: Dict[str, int] = {}
+        for node_id in victims:
+            if node_id in self.cluster.nodes():
+                for job_id, cnt in self.cluster.residents(node_id).items():
+                    displaced[job_id] = displaced.get(job_id, 0) + cnt
+                self.cluster.cordon(node_id)
+        pre_preempts = self.spot_victim_jobs
+        for node_id in victims:
+            self._on_spot_kill(node_id)
+        self.zone_blasts.append(KillBlast(
+            len(displaced), sum(displaced.values()),
+            self.spot_victim_jobs - pre_preempts, zone))
 
     def _on_autoscale_tick(self) -> None:
         if self.autoscaler is None:

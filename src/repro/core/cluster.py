@@ -70,10 +70,11 @@ class Cluster:
         return max(0, self.used_slots - self.total_slots)
 
     # --- dynamic capacity (cloud node lifecycle) ---------------------------
-    def add_node(self, node_id: str, slots: int) -> None:
+    def add_node(self, node_id: str, slots: int,
+                 zone: Optional[str] = None) -> None:
         assert self.devices is None, \
             "dynamic nodes are unsupported on a device-backed cluster"
-        self.placement.add_node(node_id, slots)
+        self.placement.add_node(node_id, slots, zone=zone)
 
     def remove_node(self, node_id: str) -> int:
         """Detach an EMPTY node's slots.  Callers must displace residents
@@ -111,6 +112,13 @@ class Cluster:
     def fragmentation(self) -> float:
         """Free-capacity stranding (see PlacementMap.fragmentation)."""
         return self.placement.fragmentation()
+
+    def zone_of(self, node_id: str) -> str:
+        return self.placement.zone_of(node_id)
+
+    def job_zones(self, job_id: str) -> Dict[str, int]:
+        """zone -> slots the job holds there (correlated blast footprint)."""
+        return self.placement.job_zones(job_id)
 
     def add_job(self, job: JobState):
         assert job.job_id not in self.jobs, job.job_id

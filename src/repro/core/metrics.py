@@ -99,15 +99,22 @@ class ScheduleMetrics:
     rescale_count: int
     dropped_jobs: int = 0
     # cloud runs (repro.cloud) — zero on fixed-capacity simulations
-    total_cost: float = 0.0        # $ billed across all provisioned nodes
+    total_cost: float = 0.0        # $ billed: node capacity + transfer
     idle_cost: float = 0.0         # $ of provisioned-but-unused slot time
     node_hours: float = 0.0        # billed node-hours
     spot_preemptions: int = 0      # nodes reclaimed by the spot market
+    transfer_cost: float = 0.0     # $ of inter-region checkpoint transfer
+    zone_reclaims: int = 0         # correlated zone events that killed nodes
     # placement (multi-node runs) — zero on single-node simulations
     avg_fragmentation: float = 0.0   # time-averaged stranded-free fraction
     kill_blast_jobs: float = 0.0     # mean jobs displaced per spot kill
     kill_blast_radius: float = 0.0   # mean displaced slots per victim job
     kill_preemptions: float = 0.0    # mean checkpoint-preempted jobs per kill
+    # correlated (zone_reclaim) EVENT-level blasts: a job losing slots on
+    # several nodes dying in one burst is ONE casualty of that burst
+    zone_blast_jobs: float = 0.0     # mean jobs displaced per zone reclaim
+    zone_blast_radius: float = 0.0   # mean displaced slots per victim job
+    zone_preemptions: float = 0.0    # mean checkpoint-preempted per reclaim
 
     def row(self) -> str:
         s = (f"total={self.total_time:9.1f}s util={self.utilization:6.2%} "
@@ -118,6 +125,9 @@ class ScheduleMetrics:
             s += (f" cost=${self.total_cost:7.3f} idle=${self.idle_cost:6.3f}"
                   f" node_h={self.node_hours:5.2f}"
                   f" spot_kills={self.spot_preemptions}")
+            if self.transfer_cost > 0.0 or self.zone_reclaims > 0:
+                s += (f" xfer=${self.transfer_cost:6.4f}"
+                      f" zone_reclaims={self.zone_reclaims}")
         if self.avg_fragmentation > 0.0 or self.kill_blast_jobs > 0.0:
             s += (f" frag={self.avg_fragmentation:5.2f}"
                   f" blast={self.kill_blast_radius:4.1f}")

@@ -14,10 +14,17 @@ Concepts
 - **cordon**: a cordoned node is excluded from capacity and from new
   placement, but existing residents stay until migrated/evicted — the
   ``kubectl cordon``/drain analog used by spot kills and scale-down drains.
+- **zone**: every node belongs to a failure zone (cloud: an availability
+  zone whose spot capacity is reclaimed in correlated bursts).  Nodes added
+  without a zone get a private one (zone == node_id), so zone-aware logic
+  degenerates gracefully on zone-oblivious clusters.
 - **strategy**: where new slots go.  ``pack`` fills the fullest non-empty
   node first (keeps whole nodes empty so the autoscaler can release them);
   ``spread`` round-robins across the emptiest nodes (minimizes how much of
-  any single job one node kill can take out).
+  any single job one node kill can take out); ``zone_spread`` balances a
+  job's slots across zones first (minimizes how much of the job one
+  correlated ZONE reclaim can take out), packing within the chosen zone so
+  the idle-dollar cost of diversification stays small.
 
 Invariants (property-tested in tests/test_placement_properties.py):
 - no slot is ever owned by two jobs;
@@ -36,7 +43,7 @@ class PlacementError(RuntimeError):
 
 
 class PlacementMap:
-    STRATEGIES = ("pack", "spread")
+    STRATEGIES = ("pack", "spread", "zone_spread")
 
     def __init__(self, strategy: str = "pack"):
         assert strategy in self.STRATEGIES, strategy
@@ -48,15 +55,20 @@ class PlacementMap:
         self._cordoned: Set[str] = set()
         self._owner: Dict[int, Optional[str]] = {}    # slot -> job (None free)
         self._slot_node: Dict[int, str] = {}
+        self._zone: Dict[str, str] = {}               # node -> failure zone
 
     # -- node lifecycle ------------------------------------------------------
-    def add_node(self, node_id: str, slots: int) -> List[int]:
+    def add_node(self, node_id: str, slots: int,
+                 zone: Optional[str] = None) -> List[int]:
         assert node_id not in self._slots, node_id
         assert slots >= 1, slots
         ids = list(range(self._next_slot, self._next_slot + slots))
         self._next_slot += slots
         self._slots[node_id] = ids
         self._node_seq[node_id] = next(self._seq)
+        # zoneless nodes get a private zone so zone_spread degenerates to a
+        # per-node spread instead of treating the cluster as one blast domain
+        self._zone[node_id] = zone if zone is not None else node_id
         for i in ids:
             self._owner[i] = None
             self._slot_node[i] = node_id
@@ -71,6 +83,7 @@ class PlacementMap:
                 f"remove_node({node_id}): still hosts {res}")
         ids = self._slots.pop(node_id)
         self._node_seq.pop(node_id)
+        self._zone.pop(node_id)
         self._cordoned.discard(node_id)
         for i in ids:
             del self._owner[i]
@@ -145,6 +158,18 @@ class PlacementMap:
                 out[nid] = out.get(nid, 0) + 1
         return out
 
+    def zone_of(self, node_id: str) -> str:
+        return self._zone[node_id]
+
+    def job_zones(self, job_id: str) -> Dict[str, int]:
+        """zone -> slot count this job holds there (its CORRELATED blast
+        footprint: what one zone reclaim can take out at once)."""
+        out: Dict[str, int] = {}
+        for nid, cnt in self.job_nodes(job_id).items():
+            z = self._zone[nid]
+            out[z] = out.get(z, 0) + cnt
+        return out
+
     def fragmentation(self) -> float:
         """Fraction of free schedulable capacity stranded on partially-used
         nodes (a whole-node consumer — scale-down, a min_replicas burst —
@@ -183,7 +208,35 @@ class PlacementMap:
             raise PlacementError(
                 f"place({job_id}, {n}): only {self.free()} slots free")
         chosen: List[int] = []
-        if strategy == "spread":
+        if strategy == "zone_spread":
+            # one slot at a time into the zone where the job currently holds
+            # the fewest slots (ties: most free capacity, then zone name) —
+            # bounds the correlated blast: a fresh n-slot placement leaves at
+            # most ceil(n / zones_with_capacity) slots in any one zone.
+            # Within the chosen zone, pack (fullest non-empty node first) so
+            # diversification does not also fragment every node.
+            zone_free: Dict[str, List[str]] = {}
+            for nid in free_ids:
+                zone_free.setdefault(self._zone[nid], []).append(nid)
+            held = self.job_zones(job_id)
+            while len(chosen) < n:
+                z = min(zone_free, key=lambda k: (
+                    held.get(k, 0),
+                    -sum(len(free_ids[nid]) for nid in zone_free[k]), k))
+                nid = min(zone_free[z], key=lambda k: (
+                    len(free_ids[k]) == len(self._slots[k]),  # empties last
+                    len(free_ids[k]),                         # least free
+                    self._node_seq[k]))
+                slot = free_ids[nid].pop(0)
+                self._owner[slot] = job_id
+                chosen.append(slot)
+                held[z] = held.get(z, 0) + 1
+                if not free_ids[nid]:
+                    del free_ids[nid]
+                    zone_free[z].remove(nid)
+                    if not zone_free[z]:
+                        del zone_free[z]
+        elif strategy == "spread":
             # one slot at a time from the currently-emptiest node
             while len(chosen) < n:
                 nid = max(free_ids, key=lambda k: (len(free_ids[k]),
@@ -210,22 +263,43 @@ class PlacementMap:
     def evict(self, job_id: str, n: Optional[int] = None,
               prefer: Optional[str] = None) -> List[int]:
         """Free ``n`` of the job's slots (all when None).  Order: the
-        ``prefer`` node first, then cordoned nodes, then nodes where the job
-        holds the fewest slots (clearing its footprint off marginal nodes),
-        highest index first within a node."""
+        ``prefer`` node first, then cordoned nodes, then — under pack/spread
+        — nodes where the job holds the fewest slots (clearing its footprint
+        off marginal nodes).  Under ``zone_spread`` the tail order instead
+        drains the job's FATTEST zone first: thin-first eviction would strip
+        the minority zones on every shrink and quietly re-concentrate the
+        job into one blast domain, undoing exactly what the placement
+        diversified for."""
         owned = self.slots_of(job_id)
         if n is None:
             n = len(owned)
         foot = self.job_nodes(job_id)
+        zone_aware = self.default_strategy == "zone_spread"
 
-        def key(slot: int):
+        def key(slot: int, zfoot):
             nid = self._slot_node[slot]
             return (nid != prefer,                 # preferred node first
                     nid not in self._cordoned,     # then draining nodes
+                    -zfoot[self._zone[nid]] if zone_aware else 0,
                     foot[nid],                     # then thin footprints
                     self._node_seq[nid],
                     -slot)                         # highest index first
-        victims = sorted(owned, key=key)[:n]
+        if zone_aware:
+            # pick one victim at a time, re-ranking as zone footprints fall:
+            # a one-shot sort against the initial footprint would drain the
+            # fattest zone wholesale and re-concentrate the survivor slots
+            zfoot = self.job_zones(job_id)
+            pool = list(owned)
+            victims = []
+            for _ in range(min(n, len(pool))):
+                slot = min(pool, key=lambda s: key(s, zfoot))
+                pool.remove(slot)
+                victims.append(slot)
+                nid = self._slot_node[slot]
+                zfoot[self._zone[nid]] -= 1
+                foot[nid] -= 1
+        else:
+            victims = sorted(owned, key=lambda s: key(s, None))[:n]
         for i in victims:
             self._owner[i] = None
         return sorted(victims)

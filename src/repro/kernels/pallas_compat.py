@@ -1,0 +1,14 @@
+"""Compat shims over Pallas TPU API drift.
+
+JAX renamed ``pltpu.CompilerParams`` to ``pltpu.TPUCompilerParams`` (and a
+later release renamed it back); resolving the name at import time keeps the
+kernels working across the rename in either direction.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = (getattr(pltpu, "TPUCompilerParams", None)
+                  or pltpu.CompilerParams)
+
+__all__ = ["CompilerParams"]

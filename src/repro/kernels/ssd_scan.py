@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _ssd_kernel(a_log_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
                 chunk: int):
@@ -89,7 +91,7 @@ def ssd_chunked_pallas(x, dt, a_log, b, c, *, chunk: int = 128,
         out_specs=pl.BlockSpec((1, Q, 1, P), lambda bi, h, n: (bi, n, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_log, x, dt, b, c)

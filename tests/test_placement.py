@@ -190,7 +190,7 @@ def test_spot_kill_displaces_only_killed_nodes_residents():
             assert j.preempt_count == 0   # bystanders untouched
             assert j.rescale_count == 0
     assert sim.spot_victim_jobs == 1
-    assert sim.kill_blasts == [(1, 8, 1)]
+    assert sim.kill_blasts == [(1, 8, 1, "default-a")]
 
 
 def test_spot_kill_migrates_residents_when_free_capacity_exists():
@@ -230,7 +230,7 @@ def test_spot_kill_shrink_prefers_killed_node_over_other_cordoned():
     a = sim.cluster.jobs["a"]
     assert a.preempt_count == 0               # shrink absorbed the kill
     assert a.rescale_count == 1
-    assert sim.kill_blasts == [(1, 8, 0)]
+    assert sim.kill_blasts == [(1, 8, 0, "default-a")]
 
 
 def test_spot_kill_shrink_comes_off_killed_node_exactly():
@@ -243,7 +243,7 @@ def test_spot_kill_shrink_comes_off_killed_node_exactly():
     a = sim.cluster.jobs["a"]
     assert a.preempt_count == 0 and a.rescale_count == 1
     assert m.dropped_jobs == 0
-    assert sim.kill_blasts == [(1, 8, 0)]
+    assert sim.kill_blasts == [(1, 8, 0, "default-a")]
 
 
 # ---------------------------------------------------------------------------

@@ -149,6 +149,7 @@ def test_residency_equals_used_slots_and_kills_are_node_exact(stream):
     sim.run()
     # every displaced job was genuinely resident on the killed node
     if sim.kill_blasts:
-        jobs_displaced, slots_displaced, _ = sim.kill_blasts[0]
-        assert jobs_displaced == len(snapshot)
-        assert slots_displaced == sum(snapshot.values())
+        blast = sim.kill_blasts[0]
+        assert blast.jobs == len(snapshot)
+        assert blast.slots == sum(snapshot.values())
+        assert blast.zone == "default-a"    # NodePool's default zone
