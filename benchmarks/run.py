@@ -18,6 +18,7 @@ MODULES = [
     ("table3", "benchmarks.table3_placement"),
     ("table4", "benchmarks.table4_traces"),
     ("table5", "benchmarks.table5_zones"),
+    ("table6", "benchmarks.table6_bidding"),
     ("roofline", "benchmarks.roofline"),
 ]
 

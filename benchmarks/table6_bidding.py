@@ -1,0 +1,208 @@
+"""Table 6 (beyond-paper) — demand-aware per-zone spot bidding vs. the
+static ``spot_fraction`` split, across skewed reclaim regimes.
+
+The autoscaler's static spot share buys the same zone mix no matter what the
+market does to it.  The :class:`~repro.cloud.bidding.DemandAwareBidder`
+instead folds every kill's realized preemption cost (checkpoint write +
+restore at the victim's slot count, outage lost-work, cross-region transfer)
+into a per-zone risk ledger and closes zones whose observed risk-cost rate
+outruns the spot discount they buy.  This grid replays bursty (MMPP) and
+heavy-tailed traces through a THREE-ZONE fleet and sweeps the bidding policy
+against the shape of the reclaim pressure:
+
+- ``uniform``     every spot zone carries the same mild correlated-reclaim
+                  stream: no zone is worth abandoning (risk below each
+                  zone's break-even), so the bidder must match the static
+                  split — and its dollars.
+- ``one_hot``     one zone is wiped whole every ~4 min — an order of
+                  magnitude hotter than its discount justifies; the bidder
+                  should abandon it (fewer preemptions, lower WMCT) while
+                  static keeps buying back into the fire after every wipe
+                  (a freshly-wiped zone is the least saturated, so it is
+                  static's FIRST preference).
+- ``escalating``  the hot zone starts calm and its reclaims accelerate
+                  (injected bursts at shrinking gaps): the bidder exits
+                  mid-run once the evidence accrues.
+
+Scenario physics (what makes the trade-off bite): pack placement parks each
+job inside one zone, elasticity 1.25 makes a whole-node loss un-absorbable
+(checkpoint-preempt, not shrink), 2 GB/slot checkpoints go to DISK on
+preemption, and 300 s spot boots make every wipe a long outage.
+
+Verdict (PASS/FAIL, per the ISSUE-5 acceptance bar): demand-aware spends no
+more than static under ``uniform`` risk, AND strictly beats it on both
+preemption-overhead dollars and WMCT under ``one_hot`` (where the hot
+zone's observed kill rate exceeds its discount's break-even).  The
+``escalating`` row is reported (adaptation speed), not gated.
+"""
+import time
+
+if __package__ in (None, ""):       # `python benchmarks/table6_bidding.py`
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit, kv
+from repro.cloud import (SPOT, AutoscalerConfig, BidderConfig, CloudProvider,
+                         DemandAwareBidder, NodeAutoscaler, NodePool)
+from repro.workloads import ReplayConfig, generate, replay_cloud
+
+CLUSTER_SLOTS = 48
+SLOTS_PER_NODE = 8
+PRICE_OD = 0.048
+PRICE_SPOT = 0.016
+N_JOBS = 32
+DURATION_MEDIAN = 900.0
+SEEDS = (5, 13, 29)
+WORKLOADS = ("bursty", "heavy_tail")
+POLICIES = ("static", "demand_aware")
+HOT_ZONE = "east-1b"
+
+#: per-zone (mean seconds between correlated reclaim events, fraction of
+#: the zone's UP spot nodes per event).  ``uniform`` is mild everywhere (a
+#: partial wipe per zone per half hour — below every zone's break-even);
+#: ``one_hot`` wipes ONE zone whole every ~4 min (far past break-even; a
+#: freshly-wiped zone is the least saturated, so static keeps buying back
+#: into the fire); ``escalating`` starts calm and injects hot-zone bursts
+#: at shrinking gaps instead.
+REGIMES = {
+    "uniform": ({"east-1b": 1800.0, "east-1c": 1800.0, "west-2a": 1800.0},
+                0.5),
+    "one_hot": ({HOT_ZONE: 240.0}, 1.0),
+    "escalating": ({}, 1.0),
+}
+#: injected hot-zone bursts for the escalating regime: calm first third,
+#: then reclaim gaps shrink 900 -> 300 s (the market deteriorating)
+ESCALATION = (1500.0, 2400.0, 3100.0, 3650.0, 4100.0, 4500.0, 4850.0,
+              5150.0, 5450.0, 5750.0, 6050.0)
+
+
+def _bidder():
+    # min_evidence 3: one uniform partial wipe (1-2 nodes) is an anecdote
+    # and keeps the prior; the hot zone's ~4-min kill cadence accumulates
+    # decayed evidence past 3 within a few wipes.  risk_aversion 10 weights
+    # the realized pain (and the kill-frequency floor) enough to cross the
+    # 1.25 close threshold on the hot cadence, while the uniform streams
+    # mostly stay below the evidence threshold (the occasional symmetric
+    # reclassification never changes a buying decision: spend is identical)
+    return DemandAwareBidder(BidderConfig(
+        half_life=1800.0, hysteresis=0.25, risk_aversion=10.0,
+        min_evidence_kills=3.0, spot_fraction_max=0.5))
+
+
+def _provider(regime: str, seed: int) -> CloudProvider:
+    intervals, fraction = REGIMES[regime]
+    pools = [
+        NodePool("od-east", slots_per_node=SLOTS_PER_NODE,
+                 price_per_slot_hour=PRICE_OD, boot_latency=120.0,
+                 teardown_delay=30.0, initial_nodes=1, max_nodes=3,
+                 region="east", zone="east-1a"),
+    ]
+    for region, zone, init in (("east", "east-1b", 1), ("east", "east-1c", 1),
+                               ("west", "west-2a", 1)):
+        pools.append(NodePool(
+            f"spot-{zone}", slots_per_node=SLOTS_PER_NODE,
+            price_per_slot_hour=PRICE_SPOT, market=SPOT,
+            boot_latency=300.0, teardown_delay=30.0, initial_nodes=init,
+            max_nodes=6, spot_lifetime_mean=14400.0, region=region,
+            zone=zone))
+    return CloudProvider(
+        pools, seed=seed,
+        region_price_multipliers={"east": 1.0, "west": 1.08},
+        zone_reclaim_interval=intervals or None,
+        zone_reclaim_fraction=fraction, transfer_price_per_gb=0.02)
+
+
+def run_cell(trace, regime: str, policy: str, seed: int):
+    prov = _provider(regime, seed)
+    asc = NodeAutoscaler(prov, AutoscalerConfig(
+        tick_interval=30.0, scale_up_cooldown=30.0, scale_down_cooldown=120.0,
+        idle_timeout=240.0, spot_fraction=0.75,
+        bidder=_bidder() if policy == "demand_aware" else None))
+    # elasticity 1.25: a whole-node loss exceeds the shrink headroom, so a
+    # zone wipe checkpoint-preempts its packed residents (disk, 2 GB/slot)
+    cfg = ReplayConfig(cluster_slots=CLUSTER_SLOTS, elasticity=1.25,
+                       bytes_per_slot=2.0e9)
+
+    def inject(sim):
+        if regime == "escalating":
+            for t in ESCALATION:
+                prov.inject_zone_reclaim(HOT_ZONE, t, sim.queue)
+    sim = replay_cloud(trace, cfg, prov, variant="elastic", autoscaler=asc,
+                       placement="pack", pre_run=inject)
+    return sim.metrics
+
+
+def _mean(xs):
+    return sum(xs) / len(xs)
+
+
+def run():
+    agg = {}
+    for regime in REGIMES:
+        for policy in POLICIES:
+            cells = []
+            t0 = time.perf_counter()
+            for wname in WORKLOADS:
+                for seed in SEEDS:
+                    kw = ({"duration_scale": DURATION_MEDIAN / 2}
+                          if wname == "heavy_tail"
+                          else {"duration_median": DURATION_MEDIAN})
+                    trace = generate(wname, n_jobs=N_JOBS, seed=seed,
+                                     **kw).normalized(CLUSTER_SLOTS,
+                                                      max_fraction=0.2)
+                    cells.append(run_cell(trace, regime, policy, seed))
+            us = (time.perf_counter() - t0) * 1e6 / len(cells)
+            agg[(regime, policy)] = a = dict(
+                wmct=_mean([m.weighted_mean_completion for m in cells]),
+                cost=_mean([m.total_cost for m in cells]),
+                idle=_mean([m.idle_cost for m in cells]),
+                ovh=_mean([m.preempt_overhead_cost for m in cells]),
+                xfer=_mean([m.transfer_cost for m in cells]),
+                kills=_mean([m.spot_preemptions for m in cells]),
+                reclaims=_mean([m.zone_reclaims for m in cells]),
+                bids=_mean([m.bid_adjustments for m in cells]),
+                hot_share=_mean([m.spot_share_by_zone.get(HOT_ZONE, 0.0)
+                                 for m in cells]),
+                dropped=sum(m.dropped_jobs for m in cells),
+            )
+            emit(f"table6.{regime}.{policy}", us, kv(
+                wmct=a["wmct"], cost=a["cost"], idle=a["idle"],
+                ovh=a["ovh"], xfer=a["xfer"], kills=a["kills"],
+                zone_reclaims=a["reclaims"], bids=a["bids"],
+                hot_share=a["hot_share"], dropped=a["dropped"]))
+
+    # verdict per the ISSUE-5 acceptance bar: matches static's dollars when
+    # no zone is worth abandoning; strictly beats it on preemption-overhead
+    # dollars AND WMCT when one zone's kill rate outruns its discount
+    uni_s, uni_d = agg[("uniform", "static")], agg[("uniform", "demand_aware")]
+    hot_s, hot_d = agg[("one_hot", "static")], agg[("one_hot", "demand_aware")]
+    uniform_ok = uni_d["cost"] <= uni_s["cost"] * 1.005 + 1e-9
+    one_hot_ok = (hot_d["ovh"] < hot_s["ovh"] and
+                  hot_d["wmct"] < hot_s["wmct"] and
+                  hot_s["dropped"] == 0 and hot_d["dropped"] == 0)
+    emit("table6.verdict.uniform", 0.0, kv(
+        "PASS" if uniform_ok else "FAIL",
+        cost_demand=uni_d["cost"], cost_static=uni_s["cost"],
+        bids_demand=uni_d["bids"]))
+    emit("table6.verdict.one_hot", 0.0, kv(
+        "PASS" if one_hot_ok else "FAIL",
+        ovh_demand=hot_d["ovh"], ovh_static=hot_s["ovh"],
+        wmct_demand=hot_d["wmct"], wmct_static=hot_s["wmct"],
+        hot_share_demand=hot_d["hot_share"], hot_share_static=hot_s["hot_share"]))
+    # adaptation speed under deteriorating markets: reported, not gated
+    esc_s = agg[("escalating", "static")]
+    esc_d = agg[("escalating", "demand_aware")]
+    emit("table6.escalating.summary", 0.0, kv(
+        ovh_delta=esc_d["ovh"] - esc_s["ovh"],
+        wmct_delta=esc_d["wmct"] - esc_s["wmct"],
+        bids_demand=esc_d["bids"]))
+    emit("table6.verdict.demand_aware_bidding", 0.0,
+         "PASS" if (uniform_ok and one_hot_ok) else "FAIL")
+    return agg
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

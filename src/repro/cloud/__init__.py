@@ -1,15 +1,20 @@
-"""Cloud provider layer: dynamic node pools, pricing, spot preemption, and a
-CLUES-style node autoscaler — the pay-as-you-go substrate the paper's elastic
-scheduler is judged against (see README §Cloud subsystem).
+"""Cloud provider layer: dynamic node pools, pricing, spot preemption, a
+CLUES-style node autoscaler, and demand-aware per-zone spot bidding — the
+pay-as-you-go substrate the paper's elastic scheduler is judged against
+(see README §Cloud subsystem, §Spot bidding).
 """
+from repro.cloud.bidding import (BidderConfig, DemandAwareBidder,
+                                 SpotRiskLedger, ZoneRisk)
 from repro.cloud.cost import CostAccountant, CostReport
-from repro.cloud.node_autoscaler import AutoscalerConfig, NodeAutoscaler
+from repro.cloud.node_autoscaler import (AutoscalerConfig, NodeAutoscaler,
+                                         NodeAutoscalerConfig)
 from repro.cloud.provider import (ON_DEMAND, SPOT, CloudProvider, Node,
                                   NodePool, NodeState)
 from repro.cloud.sim import CloudSimulator, KillBlast
 
 __all__ = [
+    "BidderConfig", "DemandAwareBidder", "SpotRiskLedger", "ZoneRisk",
     "CostAccountant", "CostReport", "AutoscalerConfig", "NodeAutoscaler",
-    "ON_DEMAND", "SPOT", "CloudProvider", "Node", "NodePool", "NodeState",
-    "CloudSimulator", "KillBlast",
+    "NodeAutoscalerConfig", "ON_DEMAND", "SPOT", "CloudProvider", "Node",
+    "NodePool", "NodeState", "CloudSimulator", "KillBlast",
 ]

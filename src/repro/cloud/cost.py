@@ -16,6 +16,11 @@ that actually held during it:
                it was written in (a preempted job resuming across a region
                boundary drags its checkpoint over the wire; intra-region
                restores are free) — itemized separately and per job
+- preemption overhead: the slot-seconds a victim spends writing/restoring
+               its disk checkpoint, priced at the blended rate — an
+               ATTRIBUTION of capacity dollars already billed (a subset of
+               used/idle), itemized per job so consumers (the spot-bidding
+               risk ledger) never re-derive it; never added to total_cost
 
 Attribution note: the counting simulator does not pin jobs to nodes, so jobs
 pay the *blended* $/slot-hour of whatever capacity mix is live — a job running
@@ -41,6 +46,11 @@ class CostReport:
     spot_preemptions: int           # nodes reclaimed by the spot market
     transfer_cost: float = 0.0      # $ of inter-region checkpoint transfer
     transfer_costs: Dict[str, float] = field(default_factory=dict)  # per job
+    # preemption overhead: checkpoint write/restore slot-time priced at the
+    # blended rate — attribution of already-billed capacity $, not additive
+    preempt_overhead_cost: float = 0.0
+    preempt_overhead_slot_s: float = 0.0  # victim slot-seconds of overhead
+    preempt_overhead_costs: Dict[str, float] = field(default_factory=dict)
 
     @property
     def idle_fraction(self) -> float:
@@ -71,6 +81,9 @@ class CostAccountant:
         self.spot_preemptions = 0
         self.transfer_cost = 0.0
         self.transfer_costs: Dict[str, float] = defaultdict(float)
+        self.preempt_overhead_cost = 0.0
+        self.preempt_overhead_slot_s = 0.0
+        self.preempt_overhead_costs: Dict[str, float] = defaultdict(float)
 
     # -- integration ---------------------------------------------------------
     def advance(self, now: float) -> None:
@@ -121,6 +134,25 @@ class CostAccountant:
     def set_allocations(self, running_jobs: Iterable[JobState]) -> None:
         self._job_alloc = {j.job_id: j.replicas for j in running_jobs}
 
+    def blended_slot_rate(self) -> float:
+        """Current blended $/slot-second of the billed capacity (0 with
+        nothing billed) — the rate preemption overhead and lost work are
+        priced at."""
+        return (self._dollars_per_s / self._billed_slots
+                if self._billed_slots else 0.0)
+
+    def bill_preempt_overhead(self, job_id: str, seconds: float,
+                              replicas: int) -> float:
+        """Attribute one checkpoint write (at preempt) or restore (at
+        resume) to the victim: ``seconds`` of ``replicas`` slots at the
+        blended rate.  Returns the dollars so callers (the spot-bidding
+        ledger) can consume them without re-deriving."""
+        dollars = seconds * max(0, replicas) * self.blended_slot_rate()
+        self.preempt_overhead_cost += dollars
+        self.preempt_overhead_slot_s += seconds * max(0, replicas)
+        self.preempt_overhead_costs[job_id] += dollars
+        return dollars
+
     def bill_transfer(self, job_id: str, data_bytes: float,
                       price_per_gb: float) -> float:
         """Bill one inter-region checkpoint restore: the job's checkpoint
@@ -142,4 +174,7 @@ class CostAccountant:
             spot_preemptions=self.spot_preemptions,
             transfer_cost=self.transfer_cost,
             transfer_costs=dict(self.transfer_costs),
+            preempt_overhead_cost=self.preempt_overhead_cost,
+            preempt_overhead_slot_s=self.preempt_overhead_slot_s,
+            preempt_overhead_costs=dict(self.preempt_overhead_costs),
         )

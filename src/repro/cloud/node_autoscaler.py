@@ -10,13 +10,15 @@ Scale-up:   unmet demand = queued min_replicas + headroom - free - booting.
             Provision when positive, at most every ``scale_up_cooldown`` s,
             never past ``budget_cap`` dollars, preferring spot pools while
             their ZONE's share of provisioned slots is below its per-zone
-            quota (``spot_fraction`` split evenly across spot zones), least-
-            saturated zone first — correlated zone reclaims make spot
-            concentration in one zone the expensive failure mode, so the
-            share check that used to be global is counted per zone (a global
-            check would keep over-provisioning the one cheapest zone until
-            the GLOBAL share hit target, parking the whole spot fleet in a
-            single blast domain).
+            quota (``spot_fraction`` split evenly across spot zones, or the
+            :class:`~repro.cloud.bidding.DemandAwareBidder`'s risk-adjusted
+            shares when ``cfg.bidder`` is set), least-saturated zone first —
+            correlated zone reclaims make spot concentration in one zone the
+            expensive failure mode, so the share check that used to be
+            global is counted per zone (a global check would keep
+            over-provisioning the one cheapest zone until the GLOBAL share
+            hit target, parking the whole spot fleet in a single blast
+            domain).
 Scale-down: only after the cluster has been continuously idle enough to free
             a whole node for ``idle_timeout`` s AND ``scale_down_cooldown``
             has passed since the last release (hysteresis against thrash).
@@ -31,10 +33,13 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import TYPE_CHECKING, Dict, List, Optional, Set
 
 from repro.cloud.provider import (ON_DEMAND, SPOT, CloudProvider, Node,
                                   NodePool, NodeState)
+
+if TYPE_CHECKING:       # avoid a runtime import cycle with cloud.bidding
+    from repro.cloud.bidding import DemandAwareBidder
 
 
 @dataclass(frozen=True)
@@ -50,10 +55,19 @@ class AutoscalerConfig:
     budget_cap: float = math.inf
     spot_fraction: float = 0.0          # target share of slots from spot
     max_horizon: float = 7 * 24 * 3600.0  # stop ticking past this sim time
+    #: per-zone share strategy: None keeps the static even split of
+    #: ``spot_fraction`` across open spot zones; a
+    #: :class:`~repro.cloud.bidding.DemandAwareBidder` instead emits each
+    #: zone's quota from its observed risk-cost rate vs. its spot discount
+    bidder: Optional["DemandAwareBidder"] = None
 
     def __post_init__(self):
         assert self.tick_interval > 0.0
         assert 0.0 <= self.spot_fraction <= 1.0
+
+
+#: canonical alias: the config belongs to the NodeAutoscaler
+NodeAutoscalerConfig = AutoscalerConfig
 
 
 class NodeAutoscaler:
@@ -70,6 +84,18 @@ class NodeAutoscaler:
 
     # -- main entry (called from the autoscale_tick event) -------------------
     def evaluate(self, sim, now: float) -> None:
+        # the bidder re-evaluates every tick (decay moves the estimates even
+        # when no scale-up runs this tick) — otherwise a zone would only be
+        # reclassified at the next provisioning attempt, long after the
+        # evidence crossed the band.  ALL spot zones are classified, not
+        # just the growable ones: a zone parked at max_nodes still takes
+        # kills, and its state must be current by the time it can grow
+        # again.  (Static split: nothing to refresh.)
+        if self.cfg.bidder is not None:
+            zones = self.provider.spot_zones()
+            if zones:
+                self.cfg.bidder.zone_quotas(zones, now, self.provider,
+                                            self.cfg.spot_fraction)
         cluster = sim.cluster
         queued = cluster.queued_jobs()
         pending = self.provider.pending_slots()
@@ -157,7 +183,7 @@ class NodeAutoscaler:
         provisioned = False
         while demand > 0:
             node = None
-            for pool in self._pool_preference():
+            for pool in self._pool_preference(now):
                 commit = pool.price_per_node_hour * self.COMMIT_HOURS
                 if (sim.accountant.spend_through(now) + committed + commit
                         > self.cfg.budget_cap):
@@ -173,14 +199,15 @@ class NodeAutoscaler:
             self.scale_ups += 1
         return provisioned
 
-    def _pool_preference(self) -> List[NodePool]:
+    def _pool_preference(self, now: float) -> List[NodePool]:
         """Zone-aware spot preference: a spot pool comes first while its
-        zone's share of ALL provisioned slots is below the per-zone quota
-        ``spot_fraction / n_spot_zones``, least-saturated (then cheapest)
-        zone first, so provisioning diversifies across blast domains instead
-        of draining the single cheapest pool.  On-demand pools follow by
-        ascending $/slot-hour; quota-filled spot pools come last.  With one
-        spot zone this reduces exactly to the old global share check."""
+        zone's share of ALL provisioned slots is below the zone's quota
+        (static even split of ``spot_fraction``, or the bidder's
+        demand-aware share), least-saturated (then cheapest) zone first, so
+        provisioning diversifies across blast domains instead of draining
+        the single cheapest pool.  On-demand pools follow by ascending
+        $/slot-hour; quota-filled spot pools come last.  With one spot zone
+        and no bidder this reduces exactly to the old global share check."""
         pools = sorted(self.provider.pools.values(),
                        key=lambda p: p.price_per_slot_hour)
         spot = [p for p in pools if p.market == SPOT]
@@ -188,12 +215,8 @@ class NodeAutoscaler:
         total = self.provider.market_slots(SPOT) + \
             self.provider.market_slots(ON_DEMAND)
         spot_share = self.provider.market_slots(SPOT) / total if total else 0.0
-        # quota splits over zones that can still GROW: a zone whose pools sit
-        # at max_nodes must not strand its slice of the configured spot share
-        # (the global gate keeps the redistribution from overshooting it)
-        open_zones = {p.zone for p in spot
-                      if self.provider.pool_census(p.name) < p.max_nodes}
-        quota = self.cfg.spot_fraction / max(1, len(open_zones))
+        open_zones = self._open_spot_zones()
+        quotas = self._zone_quotas(open_zones, now)
 
         def zone_share(pool: NodePool) -> float:
             return (self.provider.zone_slots(pool.zone, SPOT) / total
@@ -202,10 +225,33 @@ class NodeAutoscaler:
             (p for p in spot
              if p.zone in open_zones
              and spot_share < self.cfg.spot_fraction
-             and zone_share(p) < quota),
+             and zone_share(p) < quotas.get(p.zone, 0.0)),
             key=lambda p: (zone_share(p), p.price_per_slot_hour))
         saturated = [p for p in spot if p not in preferred]
         return preferred + on_demand + saturated
+
+    def _open_spot_zones(self) -> Set[str]:
+        """Spot zones that can still GROW: a zone whose pools all sit at
+        max_nodes must not strand its slice of the configured spot share
+        (the global gate keeps the redistribution from overshooting it)."""
+        return {p.zone for p in self.provider.pools.values()
+                if p.market == SPOT
+                and self.provider.pool_census(p.name) < p.max_nodes}
+
+    def _zone_quotas(self, open_zones: Set[str],
+                     now: float) -> Dict[str, float]:
+        """Per-zone spot-slot-share quotas.  Zero open zones yields zero
+        quotas — a fully saturated (or cordoned) spot fleet must not
+        produce a phantom even-split (the old ``max(1, len(open_zones))``
+        denominator quietly treated no zones as one zone)."""
+        if not open_zones:
+            return {}
+        if self.cfg.bidder is None:
+            quota = self.cfg.spot_fraction / len(open_zones)
+            return {z: quota for z in open_zones}
+        return self.cfg.bidder.zone_quotas(sorted(open_zones), now,
+                                           self.provider,
+                                           self.cfg.spot_fraction)
 
     # -- scale-down ----------------------------------------------------------
     def _removable(self, cluster) -> Optional[Node]:

@@ -114,7 +114,8 @@ class CloudProvider:
 
     def __init__(self, pools: Iterable[NodePool], seed: int = 0, *,
                  region_price_multipliers: Optional[Dict[str, float]] = None,
-                 zone_reclaim_interval: Optional[float] = None,
+                 zone_reclaim_interval: Optional[
+                     float | Dict[str, float]] = None,
                  zone_reclaim_fraction: float = 0.5,
                  transfer_price_per_gb: float = 0.02):
         # fold the region multiplier into each pool's price at registration
@@ -131,7 +132,10 @@ class CloudProvider:
         self.rng = np.random.default_rng(seed)
         #: mean seconds between correlated reclaim events PER ZONE hosting
         #: spot capacity (None disables the process); each event reclaims
-        #: ceil(fraction * UP spot nodes) of that zone at once
+        #: ceil(fraction * UP spot nodes) of that zone at once.  A dict maps
+        #: zone -> interval so markets can differ per blast domain (zones
+        #: absent from the dict carry no stream) — the one-hot and skewed
+        #: reclaim regimes the demand-aware bidder is judged against
         self.zone_reclaim_interval = zone_reclaim_interval
         self.zone_reclaim_fraction = zone_reclaim_fraction
         assert 0.0 < zone_reclaim_fraction <= 1.0, zone_reclaim_fraction
@@ -268,17 +272,26 @@ class CloudProvider:
         queue.push(t, "spot_kill", node_id)
 
     # -- correlated zone reclaims --------------------------------------------
+    def reclaim_interval_of(self, zone: str) -> Optional[float]:
+        """The zone's correlated-reclaim mean interval (None = no stream)."""
+        zi = self.zone_reclaim_interval
+        if isinstance(zi, dict):
+            return zi.get(zone)
+        return zi
+
     def schedule_zone_reclaims(self, queue: EventQueue) -> None:
         """Arm each spot zone's Poisson reclaim stream (first arrival per
-        zone).  No-op unless ``zone_reclaim_interval`` is configured."""
+        zone).  No-op unless ``zone_reclaim_interval`` is configured; with a
+        per-zone dict, only the listed zones carry a stream."""
         if self.zone_reclaim_interval is None:
             return
         for zone in self.spot_zones():
-            self._push_next_zone_reclaim(zone, 0.0, queue)
+            if self.reclaim_interval_of(zone) is not None:
+                self._push_next_zone_reclaim(zone, 0.0, queue)
 
     def _push_next_zone_reclaim(self, zone: str, now: float,
                                 queue: EventQueue) -> None:
-        t = now + float(self.rng.exponential(self.zone_reclaim_interval))
+        t = now + float(self.rng.exponential(self.reclaim_interval_of(zone)))
         self._next_fire[zone] = t
         queue.push(t, "zone_reclaim", zone)
 
@@ -300,7 +313,7 @@ class CloudProvider:
         # re-arm only when THIS event is the armed stream's own firing — an
         # injected event (arriving ahead of the pending stream event, or on
         # a zone that was never armed at all) must not start a new stream
-        if (self.zone_reclaim_interval is not None
+        if (self.reclaim_interval_of(zone) is not None
                 and zone in self._next_fire
                 and now >= self._next_fire[zone]):
             self._push_next_zone_reclaim(zone, now, queue)

@@ -43,7 +43,7 @@ from typing import Dict, List, NamedTuple, Optional
 
 from repro.cloud.cost import CostAccountant, CostReport
 from repro.cloud.node_autoscaler import NodeAutoscaler
-from repro.cloud.provider import CloudProvider, NodeState
+from repro.cloud.provider import SPOT, CloudProvider, NodeState
 from repro.core.job import JobSpec, JobStatus
 from repro.core.metrics import ScheduleMetrics
 from repro.core.policies import PolicyConfig
@@ -64,25 +64,54 @@ class KillBlast(NamedTuple):
 
 class _CloudActions(_SimActions):
     """Region-aware actions: remember where a preempted job's checkpoint was
-    written; bill inter-region transfer when it resumes elsewhere."""
+    written; bill inter-region transfer when it resumes elsewhere.  Every
+    preempt/resume also bills its checkpoint write/restore slot-time to the
+    accountant's preemption-overhead item, and resumes of KILL-caused
+    preemptions feed the follow-up cost (restore, outage lost-work,
+    transfer) back to the spot-risk ledger of the killing zone."""
 
     def preempt(self, job) -> bool:
         region = self.sim.job_region(job.job_id)    # before slots are freed
+        replicas = job.replicas
         ok = super().preempt(job)
-        if ok and region is not None:
-            self.sim._ckpt_region[job.job_id] = region
+        if ok:
+            # bill exactly the checkpoint the base preempt charged the clock
+            self.sim.accountant.bill_preempt_overhead(
+                job.job_id, self.sim.last_preempt_ckpt_s, replicas)
+            if region is not None:
+                self.sim._ckpt_region[job.job_id] = region
         return ok
 
     def create(self, job, replicas: int) -> bool:
+        wl = self.sim.workloads[job.job_id]
         ok = super().create(job, replicas)
         if ok:
+            xfer = 0.0
             src = self.sim._ckpt_region.pop(job.job_id, None)
             dst = self.sim.job_region(job.job_id) if src is not None else None
             if src is not None and dst is not None and dst != src:
-                wl = self.sim.workloads[job.job_id]
-                self.sim.accountant.bill_transfer(
+                xfer = self.sim.accountant.bill_transfer(
                     job.job_id, wl.data_bytes,
                     self.sim.provider.transfer_price_per_gb)
+            # bill exactly the restore the base create charged the clock
+            # (0 unless this create resumed a preempted job)
+            restore_dollars = 0.0
+            if self.sim.last_resume_s > 0.0:
+                restore_dollars = self.sim.accountant.bill_preempt_overhead(
+                    job.job_id, self.sim.last_resume_s, replicas)
+            kill = self.sim._kill_zone.pop(job.job_id, None)
+            if kill is not None and self.sim.risk_ledger is not None:
+                zone, killed_at, killed_reps = kill
+                # lost work: the outage window in victim slot-seconds (the
+                # job produced nothing between kill and resume), priced at
+                # the blended rate the accountant exposes
+                outage = max(0.0, self.sim.now - killed_at)
+                lost_s = outage * killed_reps
+                self.sim.risk_ledger.record_cost(
+                    zone, self.sim.now,
+                    dollars=(restore_dollars + lost_s *
+                             self.sim.accountant.blended_slot_rate()),
+                    lost_seconds=lost_s, transfer_dollars=xfer)
         return ok
 
 
@@ -109,6 +138,14 @@ class CloudSimulator(Simulator):
         # losing 2 slots on each of 3 dying nodes is one 6-slot casualty)
         self.zone_blasts: List[KillBlast] = []
         self._ckpt_region: Dict[str, str] = {}   # preempted job -> ckpt home
+        # demand-aware bidding: the bidder rides on the autoscaler config;
+        # its risk ledger consumes kill/resume costs this sim attributes
+        self.bidder = autoscaler.cfg.bidder if autoscaler is not None else None
+        self.risk_ledger = self.bidder.ledger if self.bidder is not None \
+            else None
+        # kill-preempted job -> (zone, kill time, replicas at kill): resume
+        # attributes its follow-up cost back to the zone that caused it
+        self._kill_zone: Dict[str, tuple] = {}
         self._expected_jobs = 0
         for node in provider.bootstrap(self.queue):
             self.cluster.add_node(node.node_id, node.slots,
@@ -198,7 +235,27 @@ class CloudSimulator(Simulator):
             transfer_cost=r.transfer_cost, zone_reclaims=self.zone_reclaims,
             kill_blast_jobs=blast_jobs, kill_blast_radius=blast_radius,
             kill_preemptions=preempts, zone_blast_jobs=zb_jobs,
-            zone_blast_radius=zb_radius, zone_preemptions=zb_preempts)
+            zone_blast_radius=zb_radius, zone_preemptions=zb_preempts,
+            preempt_overhead_cost=r.preempt_overhead_cost,
+            bid_adjustments=(self.bidder.adjustments
+                             if self.bidder is not None else 0),
+            spot_share_by_zone=self.spot_share_by_zone())
+
+    def spot_share_by_zone(self) -> Dict[str, float]:
+        """Observed (not bid) per-zone spot share: spot slot-hours billed in
+        each zone over ALL billed slot-hours — what the fleet actually held,
+        for comparison against the bidder's emitted quotas."""
+        total = sum(n.slots * n.billed_hours(self.now)
+                    for n in self.provider.nodes.values())
+        if total <= 0.0:
+            return {}
+        per: Dict[str, float] = {}
+        for n in self.provider.nodes.values():
+            if n.pool.market == SPOT:
+                h = n.slots * n.billed_hours(self.now)
+                if h > 0.0:
+                    per[n.pool.zone] = per.get(n.pool.zone, 0.0) + h
+        return {z: h / total for z, h in sorted(per.items())}
 
     def job_region(self, job_id: str) -> Optional[str]:
         """Region hosting the plurality of the job's slots (checkpoint home
@@ -348,19 +405,32 @@ class CloudSimulator(Simulator):
             self._evict_prefer = None
         # 3) still resident: checkpoint-to-disk preemption (same path as
         #    PreemptingPolicy), lowest priority first
+        zone = self.provider.zone_of(node_id)
+        ovh0 = self.accountant.preempt_overhead_cost
+        ovh_s0 = self.accountant.preempt_overhead_slot_s
         preempted = 0
         for j in reversed(by_prio):
             if self.cluster.residents(node_id).get(j.job_id, 0):
+                reps = j.replicas
                 self.actions.preempt(j)
                 self.spot_victim_jobs += 1
                 preempted += 1
+                # resume will attribute restore/outage/transfer to this zone
+                self._kill_zone[j.job_id] = (zone, self.now, reps)
         assert not self.cluster.residents(node_id), "spot eviction failed"
         self.cluster.remove_node(node_id)
         assert self.cluster.overcommit <= pre_overcommit, \
             "spot eviction failed"
         self.kill_blasts.append(KillBlast(
-            len(victims), sum(victims.values()), preempted,
-            self.provider.zone_of(node_id)))
+            len(victims), sum(victims.values()), preempted, zone))
+        if self.risk_ledger is not None:
+            # the kill itself plus the checkpoint dollars its victims just
+            # paid (accountant delta — never re-derived here)
+            self.risk_ledger.record_kill(
+                zone, self.now,
+                dollars=self.accountant.preempt_overhead_cost - ovh0,
+                lost_seconds=(self.accountant.preempt_overhead_slot_s
+                              - ovh_s0))
         # surviving free capacity (shrinks may have overshot node granularity)
         # goes back through the redistribution pass; pass the real free count
         # so pseudocode-faithful configs (redistribute_idle=False) see it too

@@ -115,6 +115,13 @@ class ScheduleMetrics:
     zone_blast_jobs: float = 0.0     # mean jobs displaced per zone reclaim
     zone_blast_radius: float = 0.0   # mean displaced slots per victim job
     zone_preemptions: float = 0.0    # mean checkpoint-preempted per reclaim
+    # spot bidding (cloud runs) — preemption-overhead dollars are an
+    # attribution of capacity dollars already in total_cost, never additive
+    preempt_overhead_cost: float = 0.0  # $ of ckpt write/restore slot-time
+    bid_adjustments: int = 0         # bidder open<->closed zone flips
+    # observed spot share by zone: spot slot-hours billed in the zone over
+    # all billed slot-hours (empty on fixed-capacity or spotless runs)
+    spot_share_by_zone: Dict[str, float] = field(default_factory=dict)
 
     def row(self) -> str:
         s = (f"total={self.total_time:9.1f}s util={self.utilization:6.2%} "
@@ -128,6 +135,9 @@ class ScheduleMetrics:
             if self.transfer_cost > 0.0 or self.zone_reclaims > 0:
                 s += (f" xfer=${self.transfer_cost:6.4f}"
                       f" zone_reclaims={self.zone_reclaims}")
+            if self.preempt_overhead_cost > 0.0 or self.bid_adjustments:
+                s += (f" ovh=${self.preempt_overhead_cost:6.4f}"
+                      f" bids={self.bid_adjustments}")
         if self.avg_fragmentation > 0.0 or self.kill_blast_jobs > 0.0:
             s += (f" frag={self.avg_fragmentation:5.2f}"
                   f" blast={self.kill_blast_radius:4.1f}")

@@ -57,12 +57,16 @@ class _SimActions:
         job.last_action = sim.now
         if job.start_time is None:
             job.start_time = sim.now
+        sim.last_resume_s = 0.0
         if job.preempt_count and job.work_remaining < sim.workloads[
                 job.job_id].total_work:
-            # resuming a preempted job: restart + restore-from-disk
+            # resuming a preempted job: restart + restore-from-disk; the
+            # cost is published (like last_preempt_ckpt_s) so extensions
+            # bill exactly what the simulation charged the clock
             wl = sim.workloads[job.job_id]
-            job.overhead_until = sim.now + wl.rescale.resume_cost(
-                replicas, wl.data_bytes)
+            sim.last_resume_s = wl.rescale.resume_cost(replicas,
+                                                       wl.data_bytes)
+            job.overhead_until = sim.now + sim.last_resume_s
         job.last_progress_time = sim.now
         sim._schedule_completion(job)
         sim._record_util()
@@ -112,8 +116,12 @@ class _SimActions:
         sim = self.sim
         sim._sync_progress(job)
         wl = sim.workloads[job.job_id]
-        # the victim pays the disk checkpoint before its slots free up
-        sim.now += wl.rescale.preempt_cost(job.replicas, wl.data_bytes)
+        # the victim pays the disk checkpoint before its slots free up; the
+        # cost is published so extensions (cloud overhead billing) price
+        # exactly the checkpoint the simulation charged, never a re-derival
+        sim.last_preempt_ckpt_s = wl.rescale.preempt_cost(job.replicas,
+                                                          wl.data_bytes)
+        sim.now += sim.last_preempt_ckpt_s
         sim.cluster.evict(job.job_id)
         job.status = JobStatus.QUEUED
         job.replicas = 0
@@ -140,6 +148,8 @@ class Simulator:
         self.util = UtilizationLog(total_slots)
         self.now = 0.0
         self.total_overhead = 0.0
+        self.last_preempt_ckpt_s = 0.0  # ckpt seconds of the latest preempt
+        self.last_resume_s = 0.0        # restore seconds of the latest create
         self._evict_prefer: Optional[str] = None   # forced-shrink target node
 
     # -- bookkeeping ---------------------------------------------------------

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.cloud.node_autoscaler import NodeAutoscaler
 from repro.cloud.provider import CloudProvider
@@ -124,10 +124,16 @@ def replay_variant(trace: Trace, variant: str, cfg: ReplayConfig
 def replay_cloud(trace: Trace, cfg: ReplayConfig, provider: CloudProvider,
                  *, variant: str = "elastic",
                  autoscaler: Optional[NodeAutoscaler] = None,
-                 placement: str = "pack") -> CloudSimulator:
+                 placement: str = "pack",
+                 pre_run: Optional[Callable[[CloudSimulator], None]] = None
+                 ) -> CloudSimulator:
     """Replay through :class:`CloudSimulator` (dynamic capacity, spot kills,
     dollars).  Returns the finished simulator — ``.run()`` has been called —
     so callers can read both the metrics and the cost report / kill blasts.
+    ``pre_run`` is invoked on the constructed simulator after all arrivals
+    are queued and before ``run()`` — the hook deterministic scenarios use
+    to inject events (e.g. ``provider.inject_zone_reclaim(..., sim.queue)``
+    for the escalating-reclaim bidding benchmark).
     """
     pairs = compile_trace(trace, cfg)
     wls: Dict[str, SimWorkload] = {s.job_id: w for s, w in pairs}
@@ -136,5 +142,7 @@ def replay_cloud(trace: Trace, cfg: ReplayConfig, provider: CloudProvider,
                          policy=policy, placement=placement)
     for s in specs:
         sim.submit(s, wls[s.job_id])
+    if pre_run is not None:
+        pre_run(sim)
     sim.metrics = sim.run()
     return sim

@@ -1,0 +1,600 @@
+"""Demand-aware spot bidding: the SpotRiskLedger (decay math, zone
+attribution, transfer folding), the DemandAwareBidder (shares follow observed
+risk, hysteresis band, priors, caps), the autoscaler wiring (per-zone quota
+math backfill, the zero-open-zones fix, bidder-driven preference), and the
+CloudSimulator feed (kills/resumes/transfers -> ledger; metrics surface).
+"""
+import math
+import types
+
+import pytest
+
+from repro.cloud import (SPOT, AutoscalerConfig, BidderConfig, CloudProvider,
+                         CloudSimulator, DemandAwareBidder, NodeAutoscaler,
+                         NodeAutoscalerConfig, NodePool, SpotRiskLedger)
+from repro.core.job import JobSpec, JobStatus
+from repro.core.perf_model import PiecewiseScalingModel, RescaleModel
+from repro.core.policies import PolicyConfig
+from repro.core.simulator import SimWorkload
+
+PCFG = PolicyConfig(rescale_gap=0.0)
+HL = 1000.0
+LAM = math.log(2.0) / HL
+
+
+def wl(steps=100.0, data=1e9):
+    return SimWorkload(
+        scaling=PiecewiseScalingModel(((1.0, 1.0), (64.0, 1.0))),
+        total_work=steps, data_bytes=data, rescale=RescaleModel())
+
+
+def two_zone_provider(**kw):
+    """od anchor (0.048) + two equal spot zones (0.016): discount rate per
+    8-slot node = 0.032 * 8 / 3600 $/s."""
+    return CloudProvider([
+        NodePool("od", slots_per_node=8, price_per_slot_hour=0.048,
+                 initial_nodes=1, max_nodes=4, zone="east-1a"),
+        NodePool("spot-b", slots_per_node=8, price_per_slot_hour=0.016,
+                 market=SPOT, max_nodes=4, spot_lifetime_mean=1e12,
+                 zone="east-1b"),
+        NodePool("spot-c", slots_per_node=8, price_per_slot_hour=0.016,
+                 market=SPOT, max_nodes=4, spot_lifetime_mean=1e12,
+                 zone="east-1c"),
+    ], **kw)
+
+
+SAVINGS_PER_NODE = 0.032 * 8 / 3600.0      # $/s one spot node saves vs od
+
+
+def dollars_for_ratio(ratio):
+    """Decayed-dollar tally that makes cost_rate / savings_rate == ratio
+    for a one-node zone of the two_zone_provider at the record time."""
+    return ratio * SAVINGS_PER_NODE / LAM
+
+
+# ---------------------------------------------------------------------------
+# SpotRiskLedger
+# ---------------------------------------------------------------------------
+
+def test_ledger_kill_rate_is_decayed_count_over_window():
+    led = SpotRiskLedger(half_life=HL)
+    led.record_kill("z", 0.0)
+    assert led.kill_rate("z", 0.0) == pytest.approx(LAM)
+    assert led.kill_rate("z", HL) == pytest.approx(LAM / 2.0)
+    assert led.kill_rate("z", 2 * HL) == pytest.approx(LAM / 4.0)
+
+
+def test_ledger_cost_decays_with_the_same_half_life():
+    led = SpotRiskLedger(half_life=HL)
+    led.record_kill("z", 0.0, dollars=8.0)
+    assert led.cost_rate("z", 0.0) == pytest.approx(8.0 * LAM)
+    assert led.cost_rate("z", 3 * HL) == pytest.approx(LAM)  # 8 -> 1
+
+
+def test_ledger_records_accumulate_between_decays():
+    led = SpotRiskLedger(half_life=HL)
+    led.record_kill("z", 0.0, dollars=4.0)
+    led.record_kill("z", HL, dollars=2.0)        # 4/2 + 2 = 4 at t=HL
+    assert led.cost_rate("z", HL) == pytest.approx(4.0 * LAM)
+
+
+def test_ledger_zone_attribution_is_isolated():
+    led = SpotRiskLedger(half_life=HL)
+    led.record_kill("a", 10.0, dollars=5.0)
+    assert led.kill_rate("b", 10.0) == 0.0
+    assert led.cost_rate("b", 10.0) == 0.0
+    assert not led.observed("b")
+    assert led.observed("a")
+    assert led.totals("b").kills == 0
+
+
+def test_ledger_transfer_dollars_fold_into_rate_but_stay_itemized():
+    led = SpotRiskLedger(half_life=HL)
+    led.record_kill("z", 0.0, dollars=1.0)
+    led.record_cost("z", 0.0, dollars=2.0, transfer_dollars=0.5)
+    t = led.totals("z")
+    assert t.dollars == pytest.approx(3.0)
+    assert t.transfer_dollars == pytest.approx(0.5)
+    assert t.total_dollars == pytest.approx(3.5)
+    # the decision rate sees transfer dollars too (the kill caused them)
+    assert led.cost_rate("z", 0.0) == pytest.approx(3.5 * LAM)
+
+
+def test_ledger_audit_totals_never_decay():
+    led = SpotRiskLedger(half_life=HL)
+    led.record_kill("z", 0.0, dollars=2.0, lost_seconds=30.0)
+    led.record_cost("z", 50 * HL, dollars=1.0, lost_seconds=10.0)
+    t = led.totals("z")
+    assert (t.kills, t.dollars, t.lost_s) == (1, pytest.approx(3.0),
+                                              pytest.approx(40.0))
+    assert led.cost_rate("z", 50 * HL) == pytest.approx(1.0 * LAM, rel=1e-6)
+
+
+def test_ledger_batch_kills_count_nodes():
+    led = SpotRiskLedger(half_life=HL)
+    led.record_kill("z", 0.0, nodes=3)
+    assert led.totals("z").kills == 3
+    assert led.kill_rate("z", 0.0) == pytest.approx(3 * LAM)
+
+
+def test_ledger_out_of_order_record_folds_in_without_negative_decay():
+    led = SpotRiskLedger(half_life=HL)
+    led.record_kill("z", HL, dollars=1.0)
+    led.record_kill("z", 0.0, dollars=1.0)       # late-arriving older event
+    t = led.totals("z")
+    assert t.kills == 2 and t.dollars == pytest.approx(2.0)
+    # folded at current decay level: no exp(+lambda*dt) amplification
+    assert led.cost_rate("z", HL) == pytest.approx(2.0 * LAM)
+
+
+# ---------------------------------------------------------------------------
+# DemandAwareBidder shares
+# ---------------------------------------------------------------------------
+
+def _bidder(**kw):
+    kw.setdefault("half_life", HL)
+    return DemandAwareBidder(BidderConfig(**kw))
+
+
+def test_zero_history_zones_get_the_prior_static_split():
+    b = _bidder()
+    prov = two_zone_provider()
+    shares = b.zone_quotas(["east-1b", "east-1c"], 0.0, prov, 0.6)
+    assert shares == {"east-1b": pytest.approx(0.3),
+                      "east-1c": pytest.approx(0.3)}
+    assert b.adjustments == 0
+
+
+def test_prior_ratio_above_band_starts_zones_closed():
+    b = _bidder(prior_ratio=2.0, hysteresis=0.25)
+    prov = two_zone_provider()
+    shares = b.zone_quotas(["east-1b", "east-1c"], 0.0, prov, 0.6)
+    assert shares == {"east-1b": 0.0, "east-1c": 0.0}
+
+
+def test_share_falls_when_observed_risk_outruns_the_discount():
+    b = _bidder(hysteresis=0.25)
+    prov = two_zone_provider()
+    b.ledger.record_kill("east-1b", 0.0, dollars=dollars_for_ratio(3.0))
+    shares = b.zone_quotas(["east-1b", "east-1c"], 0.0, prov, 0.6)
+    # the risky zone closes; its share redistributes to the healthy zone
+    assert shares["east-1b"] == 0.0
+    assert shares["east-1c"] == pytest.approx(0.6)
+    assert b.adjustments == 1
+
+
+def test_share_recovers_once_risk_decays_below_the_band():
+    b = _bidder(hysteresis=0.25)
+    prov = two_zone_provider()
+    b.ledger.record_kill("east-1b", 0.0, dollars=dollars_for_ratio(3.0))
+    assert b.zone_quotas(["east-1b"], 0.0, prov, 0.6)["east-1b"] == 0.0
+    # ratio 3 halves per half-life: after 3 half-lives it is 0.375 < 0.75
+    later = 3 * HL
+    shares = b.zone_quotas(["east-1b"], later, prov, 0.6)
+    assert shares["east-1b"] == pytest.approx(0.6)
+    assert b.adjustments == 2                    # close + reopen
+
+
+def test_hysteresis_band_holds_state_between_thresholds():
+    prov = two_zone_provider()
+    # ratio 1.2 sits inside the band (1 +- 0.25): an open zone STAYS open
+    b = _bidder(hysteresis=0.25)
+    b.ledger.record_kill("east-1b", 0.0, dollars=dollars_for_ratio(1.2))
+    assert b.zone_quotas(["east-1b"], 0.0, prov, 0.6)["east-1b"] > 0.0
+    # a closed zone with ratio 0.9 (> 1 - 0.25) STAYS closed
+    b2 = _bidder(hysteresis=0.25, prior_ratio=10.0)
+    b2.zone_quotas(["east-1b"], 0.0, prov, 0.6)          # closes on prior
+    b2.ledger.record_kill("east-1b", 0.0, dollars=dollars_for_ratio(0.9))
+    assert b2.zone_quotas(["east-1b"], 0.0, prov, 0.6)["east-1b"] == 0.0
+    assert b2.adjustments == 1                   # the initial close only
+
+
+def test_adjustments_count_once_per_flip_not_per_tick():
+    b = _bidder(hysteresis=0.25)
+    prov = two_zone_provider()
+    b.ledger.record_kill("east-1b", 0.0, dollars=dollars_for_ratio(5.0))
+    for t in (0.0, 10.0, 20.0, 30.0):
+        b.zone_quotas(["east-1b", "east-1c"], t, prov, 0.6)
+    assert b.adjustments == 1
+
+
+def test_spot_fraction_max_caps_redistribution():
+    b = _bidder(hysteresis=0.25, spot_fraction_max=0.4)
+    prov = two_zone_provider()
+    b.ledger.record_kill("east-1b", 0.0, dollars=dollars_for_ratio(3.0))
+    shares = b.zone_quotas(["east-1b", "east-1c"], 0.0, prov, 0.6)
+    # the survivor would inherit 0.6; the per-zone cap holds it at 0.4
+    assert shares["east-1c"] == pytest.approx(0.4)
+
+
+def test_all_zones_closed_emits_zero_everywhere():
+    b = _bidder(hysteresis=0.25)
+    prov = two_zone_provider()
+    for z in ("east-1b", "east-1c"):
+        b.ledger.record_kill(z, 0.0, dollars=dollars_for_ratio(4.0))
+    shares = b.zone_quotas(["east-1b", "east-1c"], 0.0, prov, 0.6)
+    assert shares == {"east-1b": 0.0, "east-1c": 0.0}
+
+
+def test_risk_aversion_scales_the_observed_cost():
+    prov = two_zone_provider()
+    cautious = _bidder(risk_aversion=4.0)
+    bold = _bidder(risk_aversion=1.0)
+    for b in (cautious, bold):
+        b.ledger.record_kill("east-1b", 0.0, dollars=dollars_for_ratio(0.5))
+    assert cautious.risk_ratio("east-1b", 0.0, prov) == pytest.approx(2.0)
+    assert bold.risk_ratio("east-1b", 0.0, prov) == pytest.approx(0.5)
+
+
+def test_min_evidence_below_gate_holds_state_not_prior():
+    """A zone whose decayed evidence falls under ``min_evidence_kills`` is
+    NOT reclassified: one catastrophic kill is an anecdote (zone stays
+    open), and a closed zone with no remaining exposure must not snap back
+    to the open prior as its evidence decays."""
+    prov = two_zone_provider()
+    b = _bidder(min_evidence_kills=2.0, hysteresis=0.25)
+    # 1 kill with huge dollars: dk=1 < 2 -> anecdote, stays open
+    b.ledger.record_kill("east-1b", 0.0, dollars=dollars_for_ratio(50.0))
+    assert b.risk_ratio("east-1b", 0.0, prov) is None
+    assert b.zone_quotas(["east-1b"], 0.0, prov, 0.6)["east-1b"] > 0.0
+    # two more kills: evidence crosses the gate, the zone closes
+    b.ledger.record_kill("east-1b", 1.0, nodes=2,
+                         dollars=dollars_for_ratio(5.0))
+    assert b.zone_quotas(["east-1b"], 1.0, prov, 0.6)["east-1b"] == 0.0
+    # far later the evidence has decayed below the gate again (no exposure,
+    # no new kills): the zone HOLDS closed instead of reopening on the prior
+    later = 20 * HL
+    assert b.ledger.decayed_kills("east-1b", later) < 2.0
+    assert b.zone_quotas(["east-1b"], later, prov, 0.6)["east-1b"] == 0.0
+
+
+def test_kill_cost_floor_is_the_replacement_boot_burn():
+    b = _bidder()
+    prov = CloudProvider([
+        NodePool("od", slots_per_node=8, price_per_slot_hour=0.048,
+                 initial_nodes=1, max_nodes=2, zone="east-1a"),
+        NodePool("spot-b", slots_per_node=8, price_per_slot_hour=0.016,
+                 market=SPOT, boot_latency=300.0, max_nodes=2,
+                 spot_lifetime_mean=1e12, zone="east-1b"),
+    ])
+    assert b.kill_cost_floor("east-1b", prov) == pytest.approx(
+        0.016 * 8 * 300.0 / 3600.0)
+
+
+def test_kill_frequency_alone_can_close_a_zone():
+    """Kills that happened to hit empty nodes carry zero realized dollars,
+    but their cadence (priced at the replacement boot burn) is still risk —
+    the self-limiting hot zone must not look safe just because its nodes
+    die before work lands on them."""
+    prov = two_zone_provider()
+    b = _bidder(risk_aversion=10.0, hysteresis=0.25)
+    for k in range(6):                     # a kill every 100 s, $0 realized
+        b.ledger.record_kill("east-1b", 100.0 * k)
+    t = 500.0
+    assert b.ledger.totals("east-1b").dollars == 0.0
+    assert b.risk_ratio("east-1b", t, prov) > 1.25
+    assert b.zone_quotas(["east-1b", "east-1c"], t, prov, 0.6) == {
+        "east-1b": 0.0, "east-1c": pytest.approx(0.6)}
+
+
+def test_savings_rate_floors_at_one_node_for_an_empty_zone():
+    b = _bidder()
+    prov = two_zone_provider()                   # no spot provisioned yet
+    assert b.savings_rate("east-1b", prov) == pytest.approx(SAVINGS_PER_NODE)
+
+
+def test_no_discount_plus_observed_cost_closes_the_zone():
+    prov = CloudProvider([
+        NodePool("od", slots_per_node=8, price_per_slot_hour=0.016,
+                 initial_nodes=1, max_nodes=2, zone="east-1a"),
+        # spot NOT cheaper than on-demand: the "discount" buys nothing
+        NodePool("spot-b", slots_per_node=8, price_per_slot_hour=0.016,
+                 market=SPOT, max_nodes=2, spot_lifetime_mean=1e12,
+                 zone="east-1b"),
+    ])
+    b = _bidder()
+    b.ledger.record_kill("east-1b", 0.0, dollars=1e-6)
+    assert b.risk_ratio("east-1b", 0.0, prov) == math.inf
+    assert b.zone_quotas(["east-1b"], 0.0, prov, 0.6)["east-1b"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# _pool_preference quota math (backfill: previously only covered indirectly)
+# ---------------------------------------------------------------------------
+
+def _asc(prov, **cfg):
+    return NodeAutoscaler(prov, AutoscalerConfig(**cfg))
+
+
+def test_pool_preference_least_saturated_zone_first():
+    prov = CloudProvider([
+        NodePool("od", slots_per_node=8, initial_nodes=2, max_nodes=8,
+                 zone="east-1a"),
+        NodePool("spot-b", slots_per_node=8, price_per_slot_hour=0.012,
+                 market=SPOT, initial_nodes=1, max_nodes=4,
+                 spot_lifetime_mean=1e12, zone="east-1b"),
+        NodePool("spot-c", slots_per_node=8, price_per_slot_hour=0.016,
+                 market=SPOT, initial_nodes=0, max_nodes=4,
+                 spot_lifetime_mean=1e12, zone="east-1c"),
+    ])
+    from repro.core.events import EventQueue
+    prov.bootstrap(EventQueue())
+    order = _asc(prov, spot_fraction=0.9)._pool_preference(0.0)
+    # zone c holds nothing yet: least saturated, despite the higher price
+    assert [p.name for p in order[:2]] == ["spot-c", "spot-b"]
+
+
+def test_pool_preference_excludes_closed_zone_from_preferred():
+    prov = CloudProvider([
+        NodePool("od", slots_per_node=8, initial_nodes=2, max_nodes=8,
+                 zone="east-1a"),
+        NodePool("spot-b", slots_per_node=8, price_per_slot_hour=0.012,
+                 market=SPOT, initial_nodes=1, max_nodes=1,    # frozen
+                 spot_lifetime_mean=1e12, zone="east-1b"),
+        NodePool("spot-c", slots_per_node=8, price_per_slot_hour=0.016,
+                 market=SPOT, initial_nodes=0, max_nodes=4,
+                 spot_lifetime_mean=1e12, zone="east-1c"),
+    ])
+    from repro.core.events import EventQueue
+    prov.bootstrap(EventQueue())
+    order = _asc(prov, spot_fraction=0.9)._pool_preference(0.0)
+    assert order[0].name == "spot-c"
+    assert order[-1].name == "spot-b"            # saturated tail
+
+
+def test_pool_preference_global_share_cap_blocks_all_spot():
+    prov = CloudProvider([
+        NodePool("od", slots_per_node=8, initial_nodes=1, max_nodes=8,
+                 zone="east-1a"),
+        NodePool("spot-b", slots_per_node=8, price_per_slot_hour=0.012,
+                 market=SPOT, initial_nodes=1, max_nodes=4,
+                 spot_lifetime_mean=1e12, zone="east-1b"),
+    ])
+    from repro.core.events import EventQueue
+    prov.bootstrap(EventQueue())
+    # spot already holds 1/2 the slots >= spot_fraction 0.5: od first
+    order = _asc(prov, spot_fraction=0.5)._pool_preference(0.0)
+    assert order[0].name == "od"
+
+
+def test_zone_quotas_even_split_without_bidder():
+    prov = two_zone_provider()
+    asc = _asc(prov, spot_fraction=0.6)
+    q = asc._zone_quotas({"east-1b", "east-1c"}, 0.0)
+    assert q == {"east-1b": pytest.approx(0.3),
+                 "east-1c": pytest.approx(0.3)}
+
+
+def test_zero_open_zones_yield_zero_quotas_not_a_phantom_split():
+    """The old ``spot_fraction / max(1, len(open_zones))`` treated ZERO open
+    zones as one; a fully saturated spot fleet must produce no quota at
+    all."""
+    prov = two_zone_provider()
+    asc = _asc(prov, spot_fraction=0.6)
+    assert asc._zone_quotas(set(), 0.0) == {}
+
+
+def test_fully_saturated_spot_fleet_provisions_no_spot():
+    prov = CloudProvider([
+        NodePool("od", slots_per_node=8, initial_nodes=1, max_nodes=8,
+                 zone="east-1a"),
+        # every spot pool at max_nodes: zero OPEN zones
+        NodePool("spot-b", slots_per_node=8, price_per_slot_hour=0.012,
+                 market=SPOT, initial_nodes=2, max_nodes=2,
+                 spot_lifetime_mean=1e12, zone="east-1b"),
+    ])
+    from repro.core.events import EventQueue
+    q = EventQueue()
+    prov.bootstrap(q)
+    asc = _asc(prov, spot_fraction=0.9)
+    order = asc._pool_preference(0.0)
+    assert order[0].name == "od"                 # no spot preferred
+    # and requesting through the preference can never mint a spot node
+    assert prov.request_node("spot-b", 0.0, q) is None
+
+
+def test_bidder_quota_feeds_pool_preference():
+    prov = two_zone_provider()
+    bidder = _bidder(hysteresis=0.25)
+    bidder.ledger.record_kill("east-1b", 0.0,
+                              dollars=dollars_for_ratio(5.0))
+    asc = _asc(prov, spot_fraction=0.6, bidder=bidder)
+    order = asc._pool_preference(0.0)
+    # the risky zone's pool is no longer preferred; the healthy zone leads
+    assert order[0].name == "spot-c"
+    assert order[-1].name == "spot-b"
+
+
+# ---------------------------------------------------------------------------
+# CloudSimulator feed + metrics surface
+# ---------------------------------------------------------------------------
+
+def _kill_sim(bidder, *, od_boot=60.0):
+    """One spot node in east-1b carrying a rigid job, killed at t=30; an od
+    pool boots replacements so the victim resumes (and pays restore)."""
+    prov = CloudProvider([
+        NodePool("spot-b", slots_per_node=8, price_per_slot_hour=0.016,
+                 market=SPOT, boot_latency=0.0, initial_nodes=1, max_nodes=1,
+                 spot_lifetime_mean=1e12, region="east", zone="east-1b"),
+        NodePool("od-w", slots_per_node=8, price_per_slot_hour=0.048,
+                 boot_latency=od_boot, initial_nodes=0, max_nodes=2,
+                 region="west", zone="west-2a"),
+    ], seed=1, transfer_price_per_gb=0.02)
+    asc = NodeAutoscaler(prov, AutoscalerConfig(
+        tick_interval=15.0, scale_up_cooldown=15.0, bidder=bidder))
+    sim = CloudSimulator(prov, PCFG, autoscaler=asc)
+    sim.submit(JobSpec("a", 1, 8, 8, 0.0), wl(100, data=4e9))
+    prov.inject_spot_kill(sorted(prov.nodes)[0], 30.0, sim.queue)
+    return prov, sim
+
+
+def test_spot_kill_feeds_ledger_with_zone_and_checkpoint_dollars():
+    bidder = _bidder()
+    prov, sim = _kill_sim(bidder)
+    sim.run()
+    t = bidder.ledger.totals("east-1b")
+    assert t.kills == 1
+    assert t.dollars > 0.0                       # ckpt write was priced
+    assert bidder.ledger.totals("west-2a").kills == 0
+
+
+def test_resume_attributes_outage_and_transfer_to_killing_zone():
+    bidder = _bidder()
+    prov, sim = _kill_sim(bidder)
+    m = sim.run()
+    assert sim.cluster.jobs["a"].preempt_count == 1
+    assert sim.cluster.jobs["a"].status is JobStatus.COMPLETED
+    t = bidder.ledger.totals("east-1b")
+    # outage lost-work landed (kill -> resume gap x 8 slots > boot latency)
+    assert t.lost_s >= 8 * 60.0
+    # the east->west resume's transfer dollars folded into the SAME zone
+    assert t.transfer_dollars == pytest.approx(m.transfer_cost)
+    assert m.transfer_cost == pytest.approx(4.0 * 0.02)
+
+
+def test_accountant_itemizes_preempt_overhead_without_inflating_total():
+    prov, sim = _kill_sim(None)
+    m = sim.run()
+    r = sim.cost_report
+    assert r.preempt_overhead_cost > 0.0
+    assert r.preempt_overhead_costs["a"] == pytest.approx(
+        r.preempt_overhead_cost)
+    assert r.preempt_overhead_slot_s > 0.0
+    # attribution, not an extra charge: the billing identity still holds
+    assert r.total_cost == pytest.approx(
+        r.used_cost + r.idle_cost + r.transfer_cost, abs=1e-9)
+    assert m.preempt_overhead_cost == pytest.approx(r.preempt_overhead_cost)
+
+
+def test_metrics_surface_spot_share_by_zone_and_bid_adjustments():
+    bidder = _bidder(hysteresis=0.25)
+    # poison one zone so the first tick closes it: at least one flip
+    bidder.ledger.record_kill("east-1b", 0.0, dollars=dollars_for_ratio(9.0))
+    prov, sim = _kill_sim(bidder)
+    m = sim.run()
+    assert m.bid_adjustments >= 1
+    assert "east-1b" in m.spot_share_by_zone
+    assert 0.0 < m.spot_share_by_zone["east-1b"] <= 1.0
+    # observed shares are a share of ALL billed slot-hours
+    assert sum(m.spot_share_by_zone.values()) <= 1.0 + 1e-9
+
+
+def test_saturated_zone_is_still_reclassified_each_tick():
+    """A spot zone parked at max_nodes still takes kills; the per-tick
+    bidder refresh must classify it anyway, so its state is current by the
+    time the zone can grow again (an open-zones-only refresh would leave it
+    stale-open and buy straight back into it)."""
+    prov = CloudProvider([
+        NodePool("od", slots_per_node=8, price_per_slot_hour=0.048,
+                 boot_latency=30.0, initial_nodes=1, max_nodes=2,
+                 zone="east-1a"),
+        # saturated from t=0: never in the growable set
+        NodePool("spot-b", slots_per_node=8, price_per_slot_hour=0.016,
+                 market=SPOT, initial_nodes=1, max_nodes=1,
+                 spot_lifetime_mean=1e12, zone="east-1b"),
+    ], seed=2)
+    bidder = _bidder(hysteresis=0.25)
+    bidder.ledger.record_kill("east-1b", 0.0, dollars=dollars_for_ratio(9.0))
+    asc = NodeAutoscaler(prov, AutoscalerConfig(
+        tick_interval=15.0, scale_up_cooldown=15.0, spot_fraction=0.6,
+        bidder=bidder))
+    sim = CloudSimulator(prov, PCFG, autoscaler=asc)
+    sim.submit(JobSpec("a", 1, 4, 4, 0.0), wl(60))
+    m = sim.run()
+    assert bidder.is_open("east-1b") is False
+    assert m.bid_adjustments == 1
+
+
+def test_bidder_shifts_provisioning_away_from_poisoned_zone():
+    prov = two_zone_provider(seed=5)
+    bidder = _bidder(hysteresis=0.25)
+    bidder.ledger.record_kill("east-1b", 0.0,
+                              dollars=dollars_for_ratio(9.0))
+    asc = NodeAutoscaler(prov, AutoscalerConfig(
+        tick_interval=15.0, scale_up_cooldown=15.0, spot_fraction=0.6,
+        bidder=bidder))
+    sim = CloudSimulator(prov, PCFG, autoscaler=asc)
+    for i in range(4):
+        sim.submit(JobSpec(f"j{i}", 1, 8, 8, 0.0), wl(200))
+    sim.run()
+    assert prov.pool_census("spot-b") == 0       # closed zone never bought
+    assert prov.pool_census("spot-c") >= 1       # healthy zone absorbed it
+
+
+# ---------------------------------------------------------------------------
+# Regression: the None-bidder path is byte-identical to the legacy code
+# ---------------------------------------------------------------------------
+
+def _legacy_pool_preference(self):
+    """Verbatim copy of the pre-bidder `_pool_preference` (PR 4) — including
+    its `max(1, len(open_zones))` quirk — as the reference the refactored
+    None-bidder path must reproduce exactly."""
+    from repro.cloud.provider import ON_DEMAND
+    pools = sorted(self.provider.pools.values(),
+                   key=lambda p: p.price_per_slot_hour)
+    spot = [p for p in pools if p.market == SPOT]
+    on_demand = [p for p in pools if p.market != SPOT]
+    total = self.provider.market_slots(SPOT) + \
+        self.provider.market_slots(ON_DEMAND)
+    spot_share = self.provider.market_slots(SPOT) / total if total else 0.0
+    open_zones = {p.zone for p in spot
+                  if self.provider.pool_census(p.name) < p.max_nodes}
+    quota = self.cfg.spot_fraction / max(1, len(open_zones))
+
+    def zone_share(pool):
+        return (self.provider.zone_slots(pool.zone, SPOT) / total
+                if total else 0.0)
+    preferred = sorted(
+        (p for p in spot
+         if p.zone in open_zones
+         and spot_share < self.cfg.spot_fraction
+         and zone_share(p) < quota),
+        key=lambda p: (zone_share(p), p.price_per_slot_hour))
+    saturated = [p for p in spot if p not in preferred]
+    return preferred + on_demand + saturated
+
+
+def _busy_zone_sim(seed, legacy=False):
+    prov = CloudProvider([
+        NodePool("od", slots_per_node=8, price_per_slot_hour=0.048,
+                 boot_latency=120.0, initial_nodes=1, max_nodes=3,
+                 region="east", zone="east-1a"),
+        NodePool("spot-b", slots_per_node=8, price_per_slot_hour=0.012,
+                 market=SPOT, boot_latency=120.0, initial_nodes=1,
+                 max_nodes=3, spot_lifetime_mean=2400.0, region="east",
+                 zone="east-1b"),
+        NodePool("spot-c", slots_per_node=8, price_per_slot_hour=0.016,
+                 market=SPOT, boot_latency=120.0, initial_nodes=1,
+                 max_nodes=3, spot_lifetime_mean=2400.0, region="west",
+                 zone="west-2a"),
+    ], seed=seed, zone_reclaim_interval=1500.0, zone_reclaim_fraction=0.5,
+        region_price_multipliers={"west": 1.1})
+    asc = NodeAutoscaler(prov, NodeAutoscalerConfig(
+        tick_interval=30.0, scale_up_cooldown=30.0, scale_down_cooldown=120.0,
+        idle_timeout=180.0, spot_fraction=0.6))
+    if legacy:
+        asc._pool_preference = types.MethodType(
+            lambda s, now=0.0: _legacy_pool_preference(s), asc)
+    sim = CloudSimulator(prov, PCFG, autoscaler=asc, placement="zone_spread")
+    for i in range(10):
+        sim.submit(JobSpec(f"j{i}", 1 + i % 3, 4, 12, float(i * 120)),
+                   wl(300, data=2e9))
+    return sim
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_none_bidder_path_is_byte_identical_to_legacy(seed):
+    """An identical seed/trace through the refactored autoscaler with the
+    bidder slot left empty must reproduce the legacy `_pool_preference`
+    run EXACTLY (metrics repr compared byte-for-byte) — the quota refactor
+    may not perturb the default path."""
+    m_new = _busy_zone_sim(seed, legacy=False).run()
+    m_old = _busy_zone_sim(seed, legacy=True).run()
+    assert repr(m_new) == repr(m_old)
+
+
+def test_bidder_none_explicit_equals_default_config():
+    a = AutoscalerConfig(spot_fraction=0.5)
+    b = AutoscalerConfig(spot_fraction=0.5, bidder=None)
+    assert a == b
+    assert NodeAutoscalerConfig is AutoscalerConfig

@@ -1,0 +1,145 @@
+"""Hypothesis property tests for demand-aware spot bidding:
+
+- emitted per-zone shares always lie in ``[0, spot_fraction_max]`` and sum
+  to at most the global ``spot_fraction``, whatever the ledger ingested;
+- the ledger's undecayed audit totals equal the sum of the ingested records
+  under arbitrary event interleavings (shuffled times, mixed zones);
+- a bidder fed zero kills converges to (stays at) the static even split.
+"""
+import math
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.cloud import (SPOT, BidderConfig, CloudProvider, DemandAwareBidder,
+                         NodePool, SpotRiskLedger)
+
+ZONES = ["z-a", "z-b", "z-c", "z-d"]
+
+
+def _provider(zones):
+    pools = [NodePool("od", slots_per_node=8, price_per_slot_hour=0.048,
+                      initial_nodes=1, max_nodes=4, zone="od-zone")]
+    for z in zones:
+        pools.append(NodePool(
+            f"spot-{z}", slots_per_node=8, price_per_slot_hour=0.016,
+            market=SPOT, max_nodes=4, spot_lifetime_mean=1e12, zone=z))
+    return CloudProvider(pools)
+
+
+@st.composite
+def ledger_events(draw):
+    n = draw(st.integers(0, 25))
+    events = []
+    for _ in range(n):
+        events.append((
+            draw(st.sampled_from(["kill", "cost"])),
+            draw(st.sampled_from(ZONES)),
+            draw(st.floats(0.0, 1e5)),                  # time (any order)
+            draw(st.integers(1, 3)),                    # nodes (kill only)
+            draw(st.floats(0.0, 5.0)),                  # dollars
+            draw(st.floats(0.0, 300.0)),                # lost seconds
+            draw(st.floats(0.0, 1.0)),                  # transfer dollars
+        ))
+    return events
+
+
+def _ingest(ledger, events):
+    for kind, zone, t, nodes, dollars, lost, xfer in events:
+        if kind == "kill":
+            ledger.record_kill(zone, t, nodes=nodes, dollars=dollars,
+                               lost_seconds=lost)
+        else:
+            ledger.record_cost(zone, t, dollars=dollars, lost_seconds=lost,
+                               transfer_dollars=xfer)
+
+
+@settings(max_examples=100, deadline=None)
+@given(ledger_events())
+def test_ledger_totals_equal_sum_of_ingested_records(events):
+    ledger = SpotRiskLedger(half_life=600.0)
+    _ingest(ledger, events)
+    for zone in ZONES:
+        kills = sum(e[3] for e in events if e[0] == "kill" and e[1] == zone)
+        dollars = sum(e[4] for e in events if e[1] == zone)
+        lost = sum(e[5] for e in events if e[1] == zone)
+        xfer = sum(e[6] for e in events if e[0] == "cost" and e[1] == zone)
+        t = ledger.totals(zone)
+        assert t.kills == kills
+        assert t.dollars == pytest.approx(dollars, abs=1e-9)
+        assert t.lost_s == pytest.approx(lost, abs=1e-9)
+        assert t.transfer_dollars == pytest.approx(xfer, abs=1e-9)
+        # decayed estimators never exceed what was ingested (decay only
+        # shrinks) and never go negative
+        if zone in ledger.zones:
+            s = ledger.zones[zone]
+            assert -1e-12 <= s.decayed_dollars <= t.total_dollars + 1e-9
+            assert -1e-12 <= s.decayed_kills <= t.kills + 1e-9
+
+
+@st.composite
+def share_scenarios(draw):
+    n_zones = draw(st.integers(1, 4))
+    zones = ZONES[:n_zones]
+    spot_fraction = draw(st.floats(0.0, 1.0))
+    cap = draw(st.floats(0.05, 1.0))
+    hysteresis = draw(st.floats(0.0, 0.9))
+    events = draw(ledger_events())
+    eval_times = draw(st.lists(st.floats(0.0, 2e5), min_size=1, max_size=5))
+    return zones, spot_fraction, cap, hysteresis, events, eval_times
+
+
+@settings(max_examples=100, deadline=None)
+@given(share_scenarios())
+def test_shares_bounded_per_zone_and_sum_capped_globally(scn):
+    zones, spot_fraction, cap, hysteresis, events, eval_times = scn
+    prov = _provider(zones)
+    bidder = DemandAwareBidder(BidderConfig(
+        half_life=600.0, hysteresis=hysteresis, spot_fraction_max=cap))
+    _ingest(bidder.ledger, [e for e in events if e[1] in zones])
+    for t in eval_times:
+        shares = bidder.zone_quotas(zones, t, prov, spot_fraction)
+        assert set(shares) == set(zones)
+        for share in shares.values():
+            assert 0.0 <= share <= cap + 1e-12
+        assert sum(shares.values()) <= spot_fraction + 1e-9
+        assert shares == bidder.last_shares
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 4), st.floats(0.0, 1.0),
+       st.lists(st.floats(0.0, 1e5), min_size=1, max_size=6))
+def test_zero_kill_bidder_stays_at_the_static_fraction(n_zones, spot_fraction,
+                                                       eval_times):
+    """With no kills ever recorded every zone keeps the prior (open) and the
+    emitted shares are exactly the static even split, at every evaluation
+    time — the bidder converges to (never leaves) the static policy."""
+    zones = ZONES[:n_zones]
+    prov = _provider(zones)
+    bidder = DemandAwareBidder(BidderConfig(half_life=600.0))
+    static = spot_fraction / n_zones
+    for t in sorted(eval_times):
+        shares = bidder.zone_quotas(zones, t, prov, spot_fraction)
+        for z in zones:
+            assert shares[z] == pytest.approx(static)
+    assert bidder.adjustments == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(1e-3, 1e4), st.floats(0.1, 100.0),
+       st.lists(st.floats(0.0, 1e4), min_size=2, max_size=8))
+def test_decayed_cost_monotone_between_records(half_life, dollars, times):
+    """Between records the decayed estimate only shrinks (half-life decay),
+    and a query never mutates the audit totals."""
+    ledger = SpotRiskLedger(half_life=half_life)
+    ledger.record_kill("z", 0.0, dollars=dollars)
+    prev = ledger.cost_rate("z", 0.0)
+    for t in sorted(times):
+        cur = ledger.cost_rate("z", t)
+        assert cur <= prev + 1e-12
+        prev = cur
+    assert ledger.totals("z").dollars == pytest.approx(dollars)

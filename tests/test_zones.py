@@ -318,7 +318,7 @@ def test_full_zone_does_not_strand_its_spot_quota():
     # global spot share 24/56 < 0.5; zone-c share 16/56 = 0.29 exceeds the
     # naive per-zone quota 0.25 but zone-b is frozen at max_nodes, so c
     # inherits the headroom and stays the first choice
-    assert asc._pool_preference()[0].name == "spot-c"
+    assert asc._pool_preference(0.0)[0].name == "spot-c"
 
 
 def test_spot_fraction_zero_still_means_no_spot():
