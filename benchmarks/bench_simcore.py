@@ -1,0 +1,146 @@
+"""Simulator-core throughput + observability-overhead benchmark.
+
+Two questions, answered into ``BENCH_simcore.json`` (the repo's first
+machine-readable perf snapshot — CI uploads it per run so the trajectory of
+the discrete-event core is diffable across commits):
+
+- **throughput** — events/sec and wall-clock of the elastic policy as the
+  job count grows (the event loop is the floor under every table; a
+  regression here silently stretches the whole benchmark suite);
+- **tracing overhead** — the flight recorder must be free when off.  The
+  table1 policy grid runs (a) untraced (the ``NULL_TRACER`` default: every
+  instrumentation site is one ``tracer.enabled`` attribute check) and
+  (b) actively tracing to a JSONL file.  The *null* overhead — what every
+  user pays — is additionally composed from a microbenchmarked per-site
+  guard cost times the number of instrumented operations the grid actually
+  executed; the acceptance bar is composed null overhead < 3% of grid
+  wall-clock, printed as a PASS/FAIL row.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_simcore [--out BENCH_simcore.json]
+"""
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from benchmarks.common import emit, kv
+from repro.core.simulator import VARIANTS, make_jacobi_jobs, run_variant
+from repro.obs.trace import NULL_TRACER, Tracer, install
+
+JOB_COUNTS = (16, 32, 64, 128)
+GRID_REPEATS = 5
+#: instrumented emission sites executed per processed event, conservatively:
+#: the run-loop guard itself plus the action-layer guards (start/rescale/
+#: queue/complete each fire at most a few per event) — used to COMPOSE the
+#: null overhead from the microbenchmarked per-site cost
+SITES_PER_EVENT = 6.0
+
+
+def _grid(seed: int = 7):
+    specs = make_jacobi_jobs(seed=seed, n_jobs=16, submission_gap=90.0)
+    for v in VARIANTS:
+        run_variant(v, specs, total_slots=64, rescale_gap=180.0)
+
+
+def _median_wall(fn, repeat: int) -> float:
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _guard_cost_s(n: int = 200_000) -> float:
+    """Per-site cost of the disabled-path guard (`tracer.enabled` read)."""
+    tracer = NULL_TRACER
+    t0 = time.perf_counter()
+    hits = 0
+    for _ in range(n):
+        if tracer.enabled:
+            hits += 1
+    dt = time.perf_counter() - t0
+    assert hits == 0
+    return dt / n
+
+
+def bench_throughput():
+    rows = []
+    for n_jobs in JOB_COUNTS:
+        specs = make_jacobi_jobs(seed=11, n_jobs=n_jobs,
+                                 submission_gap=45.0)
+        t0 = time.perf_counter()
+        m = run_variant("elastic", specs, total_slots=64, rescale_gap=180.0)
+        wall = time.perf_counter() - t0
+        events = m.counters.get("events", 0)
+        rows.append(dict(n_jobs=n_jobs, wall_s=wall, events=events,
+                         events_per_sec=events / wall if wall > 0 else 0.0,
+                         completions=m.counters.get("completions", 0)))
+        emit(f"bench_simcore.throughput.jobs{n_jobs}", wall * 1e6,
+             kv(events=events, events_per_sec=rows[-1]["events_per_sec"]))
+    return rows
+
+
+def bench_tracing_overhead():
+    # (a) untraced baseline: the NULL_TRACER default
+    null_wall = _median_wall(_grid, GRID_REPEATS)
+
+    # (b) actively tracing the same grid to a throwaway JSONL file
+    def traced():
+        path = tempfile.mktemp(suffix=".jsonl")
+        try:
+            with Tracer(path) as tr, install(tr):
+                _grid()
+        finally:
+            if os.path.exists(path):
+                os.unlink(path)
+    active_wall = _median_wall(traced, GRID_REPEATS)
+
+    # composed null overhead: per-site guard cost x sites executed
+    specs = make_jacobi_jobs(seed=7, n_jobs=16, submission_gap=90.0)
+    events = sum(
+        run_variant(v, specs, total_slots=64,
+                    rescale_gap=180.0).counters.get("events", 0)
+        for v in VARIANTS)
+    guard_s = _guard_cost_s()
+    composed_null_s = guard_s * events * SITES_PER_EVENT
+    null_pct = 100.0 * composed_null_s / null_wall
+    active_pct = 100.0 * (active_wall / null_wall - 1.0)
+    ok = null_pct < 3.0
+    emit("bench_simcore.tracing.null_overhead", composed_null_s * 1e6, kv(
+        "PASS" if ok else "FAIL", null_pct=null_pct,
+        guard_ns=guard_s * 1e9, sites=events * SITES_PER_EVENT,
+        grid_wall_s=null_wall))
+    emit("bench_simcore.tracing.active_overhead", active_wall * 1e6, kv(
+        active_pct=active_pct, null_wall_s=null_wall,
+        active_wall_s=active_wall))
+    return dict(grid_null_wall_s=null_wall, grid_active_wall_s=active_wall,
+                active_overhead_pct=active_pct,
+                guard_cost_ns=guard_s * 1e9,
+                grid_events=events, sites_per_event=SITES_PER_EVENT,
+                composed_null_overhead_pct=null_pct,
+                null_overhead_under_3pct=ok)
+
+
+def run(out: str = "BENCH_simcore.json"):
+    throughput = bench_throughput()
+    tracing = bench_tracing_overhead()
+    payload = dict(bench="simcore", schema=1, throughput=throughput,
+                   tracing=tracing)
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    emit("bench_simcore.json", 0.0, f"path={out}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_simcore.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.out)

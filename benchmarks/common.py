@@ -19,6 +19,39 @@ def kv(*fragments: str, **fields) -> str:
     return ";".join(parts)
 
 
+def flat_metrics(m) -> dict:
+    """Flatten ``ScheduleMetrics.to_dict()``: dict-valued fields become
+    dotted keys (``percentiles.resp_p99``, ``counters.events``)."""
+    out = {}
+    for k, v in m.to_dict().items():
+        if isinstance(v, dict):
+            for k2, v2 in v.items():
+                out[f"{k}.{k2}"] = v2
+        else:
+            out[k] = v
+    return out
+
+
+def metrics_kv(m, *keys, prefixes=(), **extra) -> str:
+    """Derived-field string straight from a :class:`ScheduleMetrics`:
+    ``keys`` name flat fields to emit (missing keys are skipped — a
+    fixed-capacity run has no ``percentiles.resp_p99_prio5`` until a
+    priority-5 job completes); ``prefixes`` pull every flat key under a
+    dotted prefix (e.g. ``percentiles.resp_p99`` matches the aggregate and
+    each priority class).  Output names drop the dict-field prefix."""
+    flat = flat_metrics(m)
+    fields = {}
+    for k in keys:
+        if k in flat:
+            fields[k.split(".", 1)[-1]] = flat[k]
+    for p in prefixes:
+        for k in sorted(flat):
+            if k.startswith(p):
+                fields[k.split(".", 1)[-1]] = flat[k]
+    fields.update(extra)
+    return kv(**fields)
+
+
 def time_call(fn, *args, repeat: int = 3, **kw):
     """Median wall time in microseconds."""
     ts = []

@@ -2,8 +2,16 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig7,table1] [--fast]
+                                          [--trace [--trace-dir DIR]]
+
+``--trace`` installs the repro.obs flight recorder around every module: each
+table/figure writes ``DIR/<name>.jsonl`` (structured span/event records —
+the input of ``python -m repro.obs.audit``) plus ``DIR/<name>.timeline.txt``
+(the text Gantt of the file's last run).  Tracing rides the module-global
+``obs.trace.install`` hook, so the modules themselves stay trace-agnostic.
 """
 import argparse
+import os
 import sys
 import traceback
 
@@ -23,11 +31,28 @@ MODULES = [
 ]
 
 
+def _run_traced(name, fn, trace_dir: str) -> None:
+    from repro.obs.timeline import render_last_run
+    from repro.obs.trace import Tracer, install
+    os.makedirs(trace_dir, exist_ok=True)
+    path = os.path.join(trace_dir, f"{name}.jsonl")
+    with Tracer(path) as tracer, install(tracer):
+        fn()
+    records = Tracer.load(path)
+    if records:
+        art = os.path.join(trace_dir, f"{name}.timeline.txt")
+        with open(art, "w") as fh:
+            fh.write(render_last_run(records) + "\n")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true",
                     help="fewer seeds for the simulation sweeps")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-module trace JSONL + timeline artifacts")
+    ap.add_argument("--trace-dir", default="trace-artifacts")
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
@@ -39,9 +64,13 @@ def main() -> None:
             import importlib
             mod = importlib.import_module(module)
             if args.fast and name in ("fig7", "fig8"):
-                mod.run(seeds=range(3))
+                fn = lambda: mod.run(seeds=range(3))  # noqa: E731
             else:
-                mod.run()
+                fn = mod.run
+            if args.trace:
+                _run_traced(name, fn, args.trace_dir)
+            else:
+                fn()
         except Exception as e:
             print(f"{name}.ERROR,0.0,{e!r}"[:400].replace("\n", " "))
             traceback.print_exc(file=sys.stderr)

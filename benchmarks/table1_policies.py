@@ -13,7 +13,7 @@ import sys
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, metrics_kv
 
 LIVE_HELPER = r"""
 import json, math
@@ -76,10 +76,12 @@ def run():
         t0 = time.perf_counter()
         m = run_variant(v, specs, total_slots=64, rescale_gap=180.0)
         us = (time.perf_counter() - t0) * 1e6
-        emit(f"table1.sim.{v}", us,
-             f"total={m.total_time:.0f};util={m.utilization:.3f};"
-             f"resp={m.weighted_mean_response:.1f};"
-             f"compl={m.weighted_mean_completion:.1f}")
+        # machine-readable row off ScheduleMetrics.to_dict(); the resp_p99
+        # prefix pulls the aggregate AND per-priority-class p99 response
+        emit(f"table1.sim.{v}", us, metrics_kv(
+            m, "total_time", "utilization", "weighted_mean_response",
+            "weighted_mean_completion", "rescale_count",
+            prefixes=("percentiles.resp_p99",)))
 
     # --- "actual" columns: live controller with real training jobs ----------
     env = dict(os.environ)

@@ -13,7 +13,7 @@ completion time.
 """
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, metrics_kv
 from repro.cloud import (SPOT, AutoscalerConfig, CloudProvider, CloudSimulator,
                          NodeAutoscaler, NodePool)
 from repro.core.autoscale import PreemptingPolicy
@@ -90,12 +90,11 @@ def run():
                 m = run_cell(policy, prov, market)
                 us = (time.perf_counter() - t0) * 1e6
                 results[(policy, prov, market)] = m
-                emit(f"table2.{policy}.{prov}.{market}", us,
-                     f"cost={m.total_cost:.4f};idle={m.idle_cost:.4f};"
-                     f"compl={m.weighted_mean_completion:.1f};"
-                     f"total={m.total_time:.0f};util={m.utilization:.3f};"
-                     f"spot_kills={m.spot_preemptions};"
-                     f"dropped={m.dropped_jobs}")
+                emit(f"table2.{policy}.{prov}.{market}", us, metrics_kv(
+                    m, "total_cost", "idle_cost",
+                    "weighted_mean_completion", "total_time", "utilization",
+                    "spot_preemptions", "dropped_jobs",
+                    "percentiles.resp_p99"))
 
     # headline verdict: autoscaled elastic beats static-max elastic on cost
     # at comparable weighted mean completion time (pure on-demand cell)

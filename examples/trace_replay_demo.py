@@ -3,10 +3,18 @@ characterize its shape, and replay it open-loop through the node-autoscaled
 cloud simulator — then compare against a static fleet running the same
 arrivals rigidly, the way a conventional batch scheduler would have.
 
+The elastic replay also runs under the repro.obs flight recorder: the run's
+JSONL trace is rendered as a text Gantt timeline and re-audited for
+conservation invariants (slot ownership, dollar conservation, preempt/resume
+pairing) — proof the replay's accounting holds together from the trace alone.
+
     PYTHONPATH=src python examples/trace_replay_demo.py
 """
 from repro.cloud import (AutoscalerConfig, CloudProvider, NodeAutoscaler,
                          NodePool)
+from repro.obs import Tracer
+from repro.obs.audit import audit_records
+from repro.obs.timeline import render
 from repro.workloads import (ReplayConfig, characterize, fixture_path,
                              load_azure_trace, replay_cloud)
 
@@ -35,16 +43,22 @@ def main():
                          variant="rigid")
     print(rigid.metrics.row())
 
-    print("\n-- autoscaled fleet, elastic policy --")
+    print("\n-- autoscaled fleet, elastic policy (flight recorder on) --")
     asc_prov = provider(initial_nodes=1)
     autoscaler = NodeAutoscaler(asc_prov, AutoscalerConfig(
         tick_interval=30.0, scale_up_cooldown=30.0, scale_down_cooldown=120.0,
         idle_timeout=180.0, headroom_slots=SLOTS_PER_NODE))
+    tracer = Tracer()   # in-memory: keeps .records instead of writing JSONL
     elastic = replay_cloud(trace, cfg, asc_prov, variant="elastic",
-                           autoscaler=autoscaler)
+                           autoscaler=autoscaler, tracer=tracer)
     print(elastic.metrics.row())
     print(f"autoscaler: {autoscaler.scale_ups} scale-ups, "
           f"{autoscaler.scale_downs} scale-downs")
+
+    print(f"\n-- flight recorder: {len(tracer.records)} records --")
+    print(render(tracer.records, width=64, max_jobs=16))
+    for report in audit_records(tracer.records, source="replay"):
+        print(report.summary())
 
     saving = 1.0 - elastic.metrics.total_cost / rigid.metrics.total_cost
     wmct_gain = 1.0 - (elastic.metrics.weighted_mean_completion

@@ -202,6 +202,8 @@ class DemandAwareBidder:
         self._open: Dict[str, bool] = {}
         self.adjustments = 0
         self.last_shares: Dict[str, float] = {}
+        # decision-audit sink (repro.obs); None records nothing
+        self.decisions = None
 
     # -- risk model ----------------------------------------------------------
     def _zone_spot_pools(self, zone: str,
@@ -289,6 +291,23 @@ class DemandAwareBidder:
                 is_open = True
             if is_open is not was_open:
                 self.adjustments += 1
+                if self.decisions is not None:
+                    self.decisions.record(
+                        "bid_flip", now, "open" if is_open else "close",
+                        inputs={
+                            "zone": z,
+                            "risk_ratio": (None if r is None or math.isinf(r)
+                                           else r),
+                            "risk_cost_rate": self.ledger.cost_rate(z, now),
+                            "kill_rate": self.ledger.kill_rate(z, now),
+                            "kill_cost_floor": self.kill_cost_floor(
+                                z, provider),
+                            "savings_rate": self.savings_rate(z, provider),
+                            "evidence_kills": self.ledger.decayed_kills(
+                                z, now),
+                            "risk_aversion": self.cfg.risk_aversion,
+                            "close_above": 1.0 + h,
+                            "open_below": 1.0 - h})
             self._open[z] = is_open
         n_open = sum(1 for z in zones if self._open[z])
         if n_open == 0:

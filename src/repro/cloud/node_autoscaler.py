@@ -81,6 +81,14 @@ class NodeAutoscaler:
         self._draining: Optional[str] = None     # node mid-drain (cordoned)
         self.scale_ups = 0
         self.scale_downs = 0
+        # decision-audit sink (repro.obs); None records nothing
+        self.decisions = None
+
+    def _decide(self, point: str, now: float, verdict: str,
+                inputs=None, alternatives=None) -> None:
+        if self.decisions is not None:
+            self.decisions.record(point, now, verdict, inputs=inputs,
+                                  alternatives=alternatives)
 
     # -- main entry (called from the autoscale_tick event) -------------------
     def evaluate(self, sim, now: float) -> None:
@@ -118,10 +126,15 @@ class NodeAutoscaler:
                 # pressure returned mid-drain: put the capacity back; the
                 # restored free slots may satisfy the demand outright, so
                 # recompute before the scale-up logic below sees it
+                self._decide("scale_down", now, "drain_cancelled",
+                             inputs={"node": self._draining,
+                                     "demand": demand})
                 sim.cancel_drain(self._draining)
                 self._draining = None
                 demand = _demand()
             elif sim.begin_drain(self._draining):     # migrate-or-wait
+                self._decide("scale_down", now, "drain_complete",
+                             inputs={"node": self._draining})
                 self._draining = None
                 self._last_down = now
                 self.scale_downs += 1
@@ -158,7 +171,15 @@ class NodeAutoscaler:
         if (now - self._idle_since >= self.cfg.idle_timeout
                 and now - self._last_down >= self.cfg.scale_down_cooldown):
             self._idle_since = None     # restart the idle clock
-            if sim.begin_drain(victim.node_id):
+            drained = sim.begin_drain(victim.node_id)
+            self._decide(
+                "scale_down", now,
+                "drained" if drained else "drain_started",
+                inputs={"node": victim.node_id,
+                        "residents": cluster.resident_count(victim.node_id)
+                        if not drained else 0,
+                        "free": cluster.free_slots})
+            if drained:
                 self._last_down = now
                 self.scale_downs += 1
             else:
@@ -180,6 +201,8 @@ class NodeAutoscaler:
             * n.pool.price_per_node_hour
             for n in self.provider.nodes_in(NodeState.PROVISIONING,
                                             NodeState.UP))
+        attempts = [] if self.decisions is not None else None
+        demand0 = demand
         provisioned = False
         while demand > 0:
             node = None
@@ -187,16 +210,40 @@ class NodeAutoscaler:
                 commit = pool.price_per_node_hour * self.COMMIT_HOURS
                 if (sim.accountant.spend_through(now) + committed + commit
                         > self.cfg.budget_cap):
+                    if attempts is not None:
+                        attempts.append({"pool": pool.name,
+                                         "zone": pool.zone,
+                                         "outcome": "over_budget"})
                     continue            # this pool would bust the budget
                 node = self.provider.request_node(pool.name, now, sim.queue)
                 if node is not None:
                     committed += commit
+                    if attempts is not None:
+                        attempts.append({"pool": pool.name,
+                                         "zone": pool.zone,
+                                         "market": pool.market,
+                                         "outcome": "requested",
+                                         "slots": node.slots})
                     break
+                if attempts is not None:
+                    attempts.append({"pool": pool.name, "zone": pool.zone,
+                                     "outcome": "at_max_nodes"})
             if node is None:
                 break                   # every pool at max_nodes or over cap
             demand -= node.slots
             provisioned = True
             self.scale_ups += 1
+        if self.decisions is not None:
+            cap = self.cfg.budget_cap
+            self.decisions.record(
+                "scale_up", now,
+                "provisioned" if provisioned else "blocked",
+                inputs={"demand": demand0, "unmet": max(0, demand),
+                        "spend": sim.accountant.spend_through(now),
+                        "budget_cap": None if math.isinf(cap) else cap,
+                        "preference": [p.name
+                                       for p in self._pool_preference(now)]},
+                alternatives=attempts)
         return provisioned
 
     def _pool_preference(self, now: float) -> List[NodePool]:

@@ -76,8 +76,14 @@ class _CloudActions(_SimActions):
         ok = super().preempt(job)
         if ok:
             # bill exactly the checkpoint the base preempt charged the clock
-            self.sim.accountant.bill_preempt_overhead(
+            dollars = self.sim.accountant.bill_preempt_overhead(
                 job.job_id, self.sim.last_preempt_ckpt_s, replicas)
+            if self.sim.tracer.enabled:
+                self.sim.tracer.emit(
+                    "cost_preempt_overhead", t=self.sim.now, job=job.job_id,
+                    dollars=dollars,
+                    slot_s=self.sim.last_preempt_ckpt_s * replicas,
+                    phase="ckpt")
             if region is not None:
                 self.sim._ckpt_region[job.job_id] = region
         return ok
@@ -93,12 +99,21 @@ class _CloudActions(_SimActions):
                 xfer = self.sim.accountant.bill_transfer(
                     job.job_id, wl.data_bytes,
                     self.sim.provider.transfer_price_per_gb)
+                if self.sim.tracer.enabled:
+                    self.sim.tracer.emit("cost_transfer", t=self.sim.now,
+                                         job=job.job_id, dollars=xfer)
             # bill exactly the restore the base create charged the clock
             # (0 unless this create resumed a preempted job)
             restore_dollars = 0.0
             if self.sim.last_resume_s > 0.0:
                 restore_dollars = self.sim.accountant.bill_preempt_overhead(
                     job.job_id, self.sim.last_resume_s, replicas)
+                if self.sim.tracer.enabled:
+                    self.sim.tracer.emit(
+                        "cost_preempt_overhead", t=self.sim.now,
+                        job=job.job_id, dollars=restore_dollars,
+                        slot_s=self.sim.last_resume_s * replicas,
+                        phase="restore")
             kill = self.sim._kill_zone.pop(job.job_id, None)
             if kill is not None and self.sim.risk_ledger is not None:
                 zone, killed_at, killed_reps = kill
@@ -118,10 +133,10 @@ class _CloudActions(_SimActions):
 class CloudSimulator(Simulator):
     def __init__(self, provider: CloudProvider, policy_cfg: PolicyConfig,
                  *, autoscaler: Optional[NodeAutoscaler] = None,
-                 policy=None, placement: str = "pack"):
+                 policy=None, placement: str = "pack", tracer=None):
         # all capacity comes from nodes; `placement` picks the slot->node
         # strategy (pack: low fragmentation; spread: small kill blast radius)
-        super().__init__(0, policy_cfg, placement=placement)
+        super().__init__(0, policy_cfg, placement=placement, tracer=tracer)
         if policy is not None:
             self.policy = policy
         self.provider = provider
@@ -151,12 +166,29 @@ class CloudSimulator(Simulator):
             self.cluster.add_node(node.node_id, node.slots,
                                   zone=node.pool.zone)
             self.accountant.node_up(node)
+            self._trace_node_up(node)
         provider.schedule_zone_reclaims(self.queue)
         self.util.record_capacity(0.0, self.cluster.total_slots)
         if autoscaler is not None:
             self.queue.push(0.0, "autoscale_tick", None)
 
     # -- bookkeeping hooks ---------------------------------------------------
+    def _trace_node_up(self, node) -> None:
+        if self.tracer.enabled:
+            self.tracer.emit("node_up", t=self.now, node=node.node_id,
+                             slots=node.slots, zone=node.pool.zone,
+                             region=node.pool.region, market=node.pool.market,
+                             price_per_slot_hour=node.pool.price_per_slot_hour)
+
+    def _wire_decisions(self) -> None:
+        super()._wire_decisions()
+        from repro.obs.decisions import DecisionLog
+        log = DecisionLog(self.tracer)
+        if self.autoscaler is not None and self.autoscaler.decisions is None:
+            self.autoscaler.decisions = log
+        if self.bidder is not None and self.bidder.decisions is None:
+            self.bidder.decisions = log
+
     def _record_util(self):
         # integrate [last boundary, now] under the OLD allocations/rates,
         # then snapshot the new allocation state
@@ -206,8 +238,8 @@ class CloudSimulator(Simulator):
         self._expected_jobs += 1
         super().submit(spec, workload)
 
-    def run(self) -> ScheduleMetrics:
-        metrics = super().run()
+    def _final_metrics(self) -> ScheduleMetrics:
+        metrics = super()._final_metrics()
         self.accountant.advance(self.now)
         self.cost_report = self.accountant.report()
         r = self.cost_report
@@ -279,6 +311,8 @@ class CloudSimulator(Simulator):
         self.cluster.remove_node(node_id)
         self.provider.release_node(node_id, self.now, self.queue)
         self._record_capacity()
+        if self.tracer.enabled:
+            self.tracer.emit("node_removed", t=self.now, node=node_id)
         return True
 
     # -- drain (graceful scale-down) -----------------------------------------
@@ -291,6 +325,10 @@ class CloudSimulator(Simulator):
             return True                           # spot market beat us to it
         if not self.cluster.is_cordoned(node_id):
             self._record_util()
+            if self.tracer.enabled:
+                self.tracer.emit("node_cordon", t=self.now, node=node_id,
+                                 slots=self.provider.nodes[node_id].slots,
+                                 cause="drain")
             self.cluster.cordon(node_id)
             self._record_capacity()               # capacity leaves now
         self._sync_all()
@@ -306,6 +344,9 @@ class CloudSimulator(Simulator):
             self._record_util()
             self.cluster.uncordon(node_id)
             self._record_capacity()
+            if self.tracer.enabled:
+                self.tracer.emit("node_uncordon", t=self.now, node=node_id,
+                                 slots=self.provider.nodes[node_id].slots)
 
     def _migrate_job(self, job, node_id: str) -> int:
         """Relocate a running job's workers off ``node_id`` onto free slots
@@ -324,6 +365,11 @@ class CloudSimulator(Simulator):
             job.overhead_until = max(self.now, job.overhead_until) + overhead
             self.total_overhead += overhead
             self.migrations += 1
+            self.counters.inc("migrations")
+            if self.tracer.enabled:
+                self.tracer.emit("job_migrate", t=self.now, job=job.job_id,
+                                 from_node=node_id, moved=moved,
+                                 overhead_s=overhead)
             self._schedule_completion(job)
             self._record_util()
         return moved
@@ -337,6 +383,9 @@ class CloudSimulator(Simulator):
             if node is not None:
                 self._record_util()               # integrate, then drop rate
                 self.accountant.node_down(node)
+                if self.tracer.enabled:
+                    self.tracer.emit("node_billing_end", t=self.now,
+                                     node=node.node_id, cause="teardown")
         elif ev.kind == "spot_kill":
             self._on_spot_kill(ev.payload)
         elif ev.kind == "zone_reclaim":
@@ -352,6 +401,7 @@ class CloudSimulator(Simulator):
             return                                # killed while booting
         self._record_util()                       # close interval at old rate
         self.accountant.node_up(node)
+        self._trace_node_up(node)
         self.cluster.add_node(node.node_id, node.slots, zone=node.pool.zone)
         self._record_capacity()
         # fresh capacity is a completion-shaped opportunity: run the Fig. 3
@@ -366,8 +416,12 @@ class CloudSimulator(Simulator):
             return                                # stale: already gone
         self._record_util()
         self.accountant.node_down(node, killed=True)
+        self.counters.inc("spot_kills")
         if not was_up:
-            return                                # was draining: billing only
+            if self.tracer.enabled:   # was draining: billing only
+                self.tracer.emit("node_billing_end", t=self.now,
+                                 node=node_id, cause="spot_kill_draining")
+            return
         self._sync_all()
         # placement makes the blast set exact: ONLY the jobs resident on the
         # killed node are displaced (paper: the operator loses specific pods
@@ -377,6 +431,14 @@ class CloudSimulator(Simulator):
         # that drain's deficit, not this kill's: the postcondition is that
         # the kill adds nothing to it
         pre_overcommit = self.cluster.overcommit
+        was_cordoned = self.cluster.is_cordoned(node_id)
+        if self.tracer.enabled:
+            # opens the blast window the auditor allows transient overcommit
+            # in; closed by the matching kill_blast_end below
+            self.tracer.emit("spot_kill", t=self.now, node=node_id,
+                             slots=node.slots,
+                             zone=self.provider.zone_of(node_id),
+                             residents=victims, was_cordoned=was_cordoned)
         self.cluster.cordon(node_id)              # capacity is gone NOW
         self._record_capacity()
         by_prio = sorted((self.cluster.jobs[v] for v in victims),
@@ -423,6 +485,10 @@ class CloudSimulator(Simulator):
             "spot eviction failed"
         self.kill_blasts.append(KillBlast(
             len(victims), sum(victims.values()), preempted, zone))
+        if self.tracer.enabled:
+            self.tracer.emit("kill_blast_end", t=self.now, node=node_id,
+                             jobs=len(victims), slots=sum(victims.values()),
+                             preempts=preempted)
         if self.risk_ledger is not None:
             # the kill itself plus the checkpoint dollars its victims just
             # paid (accountant delta — never re-derived here)
@@ -449,6 +515,10 @@ class CloudSimulator(Simulator):
         if not victims:
             return
         self.zone_reclaims += 1
+        self.counters.inc("zone_reclaims")
+        if self.tracer.enabled:
+            self.tracer.emit("zone_reclaim", t=self.now, zone=zone,
+                             victims=list(victims))
         # event-level blast set, captured BEFORE displacement: a preemption
         # during the batch evicts the job everywhere, so later nodes' own
         # resident maps would under-count what this event took from it
@@ -457,10 +527,17 @@ class CloudSimulator(Simulator):
             if node_id in self.cluster.nodes():
                 for job_id, cnt in self.cluster.residents(node_id).items():
                     displaced[job_id] = displaced.get(job_id, 0) + cnt
+                if self.tracer.enabled:
+                    self.tracer.emit(
+                        "node_cordon", t=self.now, node=node_id,
+                        slots=self.provider.nodes[node_id].slots,
+                        cause="zone_reclaim")
                 self.cluster.cordon(node_id)
         pre_preempts = self.spot_victim_jobs
         for node_id in victims:
             self._on_spot_kill(node_id)
+        if self.tracer.enabled:
+            self.tracer.emit("zone_reclaim_end", t=self.now, zone=zone)
         self.zone_blasts.append(KillBlast(
             len(displaced), sum(displaced.values()),
             self.spot_victim_jobs - pre_preempts, zone))
@@ -468,6 +545,7 @@ class CloudSimulator(Simulator):
     def _on_autoscale_tick(self) -> None:
         if self.autoscaler is None:
             return
+        self.counters.inc("autoscale_ticks")
         self._sync_all()
         self.autoscaler.evaluate(self, self.now)
         # CLUES-style periodic queue re-examination: offer free capacity to

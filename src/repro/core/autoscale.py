@@ -92,20 +92,42 @@ class PreemptingPolicy(ElasticPolicy):
         needed = job.spec.min_replicas - self._avail(cluster)
         if needed <= 0:
             return
+        considered = [] if self.decisions is not None else None
         victims = []
         for j in reversed(self._sorted_desc(cluster.running_jobs(), now)):
             if self._priority(j, now) >= self._priority(job, now):
+                if considered is not None:
+                    considered.append({"job": j.job_id, "eligible": False,
+                                       "why": "priority_ceiling"})
                 break
             victims.append(j)
+            if considered is not None:
+                considered.append({"job": j.job_id, "eligible": True,
+                                   "slots": j.replicas,
+                                   "priority": j.spec.priority})
             needed -= j.replicas
             if needed <= 0:
                 break
         if needed > 0:
+            if self.decisions is not None:
+                self.decisions.record(
+                    "preempt_select", now, "insufficient",
+                    inputs={"job": job.spec.job_id, "short": needed},
+                    alternatives=considered)
             return      # even preempting everything lower wouldn't fit
         for v in victims:
             act.preempt(v)
         free = self._avail(cluster)
         replicas = job.spec.feasible(min(free, job.spec.max_replicas))
+        started = False
         if replicas >= job.spec.min_replicas:
-            act.create(job, replicas)
+            started = act.create(job, replicas)
             # on failure the job simply stays QUEUED for redistribution
+        if self.decisions is not None:
+            self.decisions.record(
+                "preempt_select", now,
+                "preempted_started" if started else "preempted_queued",
+                inputs={"job": job.spec.job_id,
+                        "victims": [v.job_id for v in victims],
+                        "granted": replicas if started else 0},
+                alternatives=considered)

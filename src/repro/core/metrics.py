@@ -15,8 +15,9 @@
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.job import JobState, completion_time, response_time
 
@@ -43,6 +44,16 @@ def _integrate(events: Sequence[Tuple[float, float]], t0: float, t1: float,
     return area
 
 
+def _coalesce(series: List[Tuple[float, float]], t: float, value) -> None:
+    """Append ``(t, value)``, coalescing same-timestamp updates: several
+    state changes at one instant leave only the last value (a zero-width
+    step contributes no area and would bloat the series)."""
+    if series and series[-1][0] == t:
+        series[-1] = (t, value)
+    else:
+        series.append((t, value))
+
+
 @dataclass
 class UtilizationLog:
     total_slots: int
@@ -53,22 +64,13 @@ class UtilizationLog:
     frag_events: List[Tuple[float, float]] = field(default_factory=list)
 
     def record(self, t: float, used: int):
-        if self.events and self.events[-1][0] == t:
-            self.events[-1] = (t, used)
-        else:
-            self.events.append((t, used))
+        _coalesce(self.events, t, used)
 
     def record_fragmentation(self, t: float, frag: float):
-        if self.frag_events and self.frag_events[-1][0] == t:
-            self.frag_events[-1] = (t, frag)
-        else:
-            self.frag_events.append((t, frag))
+        _coalesce(self.frag_events, t, frag)
 
     def record_capacity(self, t: float, total: int):
-        if self.capacity_events and self.capacity_events[-1][0] == t:
-            self.capacity_events[-1] = (t, total)
-        else:
-            self.capacity_events.append((t, total))
+        _coalesce(self.capacity_events, t, total)
 
     def average(self, t0: float, t1: float) -> float:
         if t1 <= t0 or not self.events:
@@ -122,6 +124,17 @@ class ScheduleMetrics:
     # observed spot share by zone: spot slot-hours billed in the zone over
     # all billed slot-hours (empty on fixed-capacity or spotless runs)
     spot_share_by_zone: Dict[str, float] = field(default_factory=dict)
+    # streaming latency percentiles (repro.obs.stats.LatencyRecorder): flat
+    # keys like ``resp_p99`` (all jobs) / ``resp_p99_prio5`` (one priority
+    # class) for resp/compl/wait x p50/p95/p99; empty when no job completed
+    percentiles: Dict[str, float] = field(default_factory=dict)
+    # monotonic run counters (events processed, rescales, migrations, ...)
+    counters: Dict[str, int] = field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Machine-readable form (plain scalars + dicts, JSON-safe) — the
+        benchmark tables emit rows from this instead of ad-hoc formatting."""
+        return dataclasses.asdict(self)
 
     def row(self) -> str:
         s = (f"total={self.total_time:9.1f}s util={self.utilization:6.2%} "
@@ -144,10 +157,14 @@ class ScheduleMetrics:
         return s
 
 
-def compute_metrics(jobs: Sequence[JobState], util: UtilizationLog
+def compute_metrics(jobs: Sequence[JobState], util: UtilizationLog, *,
+                    latency=None, counters: Optional[Dict[str, int]] = None
                     ) -> ScheduleMetrics:
-    """Cost fields stay at their zero defaults here; CloudSimulator.run()
-    fills them from its CostReport via dataclasses.replace."""
+    """Cost fields stay at their zero defaults here; CloudSimulator's
+    ``_final_metrics`` fills them from its CostReport via
+    dataclasses.replace.  ``latency`` is a
+    :class:`repro.obs.stats.LatencyRecorder` (or anything with
+    ``percentile_fields()``); ``counters`` a plain dict."""
     done = [j for j in jobs if j.end_time is not None]
     submits = [j.spec.submit_time for j in jobs]
     t0 = min(submits) if submits else 0.0
@@ -163,4 +180,7 @@ def compute_metrics(jobs: Sequence[JobState], util: UtilizationLog
         rescale_count=sum(j.rescale_count for j in jobs),
         dropped_jobs=len(jobs) - len(done),
         avg_fragmentation=util.average_fragmentation(t0, t1),
+        percentiles=(latency.percentile_fields()
+                     if latency is not None else {}),
+        counters=dict(counters) if counters else {},
     )

@@ -36,6 +36,9 @@ from repro.core.elastic import ElasticTrainer, RescaleTimings, TrainJobConfig
 from repro.core.job import JobSpec, JobState, JobStatus
 from repro.core.metrics import ScheduleMetrics, UtilizationLog, compute_metrics
 from repro.core.policies import Actions, ElasticPolicy, PolicyConfig
+from repro.obs.decisions import DecisionLog
+from repro.obs.stats import Counters, LatencyRecorder
+from repro.obs.trace import current_tracer
 
 
 @dataclass
@@ -58,6 +61,7 @@ class _LiveActions(Actions):
             return False        # raced a cordon/drain: stay queued
         slots = op.cluster.place(job.job_id, replicas)
         devices = op.cluster.devices_for_slots(slots)
+        resumed = bool(op.restart_flags.get(job.job_id))
         try:
             if live.trainer is None:
                 live.trainer = live.factory(devices)
@@ -78,6 +82,11 @@ class _LiveActions(Actions):
         if job.start_time is None:
             job.start_time = op.now
         op._record_util()
+        op.latency.mark_started(job.job_id, op.now)
+        if op.tracer.enabled:
+            op.tracer.emit("job_start", t=op.now, job=job.job_id,
+                           slots=replicas, priority=job.spec.priority,
+                           resume=resumed, overhead_s=0.0)
         return True
 
     def expand(self, job: JobState, replicas: int) -> bool:
@@ -103,6 +112,7 @@ class _LiveActions(Actions):
                              prefer=op._evict_prefer)
         slots = op.cluster.slots_of(job.job_id)
         devices = op.cluster.devices_for_slots(slots)
+        from_replicas = job.replicas
         timings = live.trainer.rescale(devices)
         op.rescale_events.append((op.now, job.job_id, job.replicas, replicas,
                                   timings))
@@ -112,10 +122,19 @@ class _LiveActions(Actions):
         job.last_action = op.now
         job.rescale_count += 1
         op._record_util()
+        op.counters.inc("rescales")
+        if op.tracer.enabled:
+            op.tracer.emit("job_rescale", t=op.now, job=job.job_id,
+                           **{"from": from_replicas, "to": replicas},
+                           overhead_s=timings.total)
         return True
 
     def enqueue(self, job: JobState) -> None:
         job.status = JobStatus.QUEUED
+        op = self.op
+        op.latency.mark_queued(job.job_id, op.now)
+        if op.tracer.enabled:
+            op.tracer.emit("job_queue", t=op.now, job=job.job_id)
 
 
 class ElasticClusterController:
@@ -125,7 +144,7 @@ class ElasticClusterController:
                  step_time_fn: Optional[Callable[[JobState], float]] = None,
                  steps_per_tick: int = 1,
                  slots_per_node: Optional[int] = None,
-                 placement: str = "pack"):
+                 placement: str = "pack", tracer=None):
         self.cluster = Cluster(slots, devices, devices_per_slot,
                                slots_per_node=slots_per_node,
                                placement=placement)
@@ -143,6 +162,16 @@ class ElasticClusterController:
         self.util = UtilizationLog(slots)
         self.rescale_events: List[tuple] = []
         self.replica_trace: List[tuple] = []     # (t, job_id, replicas)
+        # observability: same flight recorder as the simulators, so one
+        # auditor/timeline consumes traces from both lanes
+        self.tracer = tracer if tracer is not None else current_tracer()
+        self.counters = Counters()
+        self.latency = LatencyRecorder()
+        self.run_id = self.tracer.next_run_id()
+        self._submitted: set = set()     # job_submit emitted (resubmits skip)
+        if self.tracer.enabled:
+            self.tracer.emit("run_start", t=0.0, run=self.run_id, slots=slots,
+                             sim=type(self).__name__)
 
     # -- clock ----------------------------------------------------------------
     def advance_clock(self, dt: float):
@@ -189,6 +218,10 @@ class ElasticClusterController:
         self.restart_flags[job_id] = True
         del self.cluster.jobs[job_id]
         self._record_util()
+        self.counters.inc("failures")
+        self.latency.mark_queued(job_id, self.now)
+        if self.tracer.enabled:
+            self.tracer.emit("job_fail", t=self.now, job=job_id, slots=freed)
         if redistribute:
             # freed capacity is redistributed like a completion
             self.policy.on_job_complete(self.cluster, freed, self.now,
@@ -205,6 +238,9 @@ class ElasticClusterController:
         :meth:`inject_failure` but with a placement-exact blast set.  The
         node's capacity stays offline until :meth:`recover_node`."""
         victims = sorted(self.cluster.residents(node_id))
+        if self.tracer.enabled:
+            self.tracer.emit("node_cordon", t=self.now, node=node_id,
+                             cause="failure")
         self.cluster.cordon(node_id)
         self.util.record_capacity(self.now, self.cluster.total_slots)
         for job_id in victims:
@@ -222,6 +258,8 @@ class ElasticClusterController:
         and running jobs like a completion (Fig. 3 pass)."""
         self.cluster.uncordon(node_id)
         self.util.record_capacity(self.now, self.cluster.total_slots)
+        if self.tracer.enabled:
+            self.tracer.emit("node_uncordon", t=self.now, node=node_id)
         free = self.cluster.free_slots
         if free > 0:
             self.policy.on_job_complete(self.cluster, free, self.now,
@@ -233,6 +271,9 @@ class ElasticClusterController:
         free slots elsewhere (live rescale onto the new device set), shrink
         what cannot move, and restart-requeue jobs stuck with nowhere to go.
         The node ends cordoned and empty."""
+        if self.tracer.enabled:
+            self.tracer.emit("node_cordon", t=self.now, node=node_id,
+                             cause="drain")
         self.cluster.cordon(node_id)
         self.util.record_capacity(self.now, self.cluster.total_slots)
         residents = self.cluster.residents(node_id)
@@ -250,6 +291,11 @@ class ElasticClusterController:
                     (self.now, job_id, job.replicas, job.replicas, timings))
                 self.advance_clock(timings.total)
                 job.device_ids = tuple(slots)
+                self.counters.inc("migrations")
+                if self.tracer.enabled:
+                    self.tracer.emit("job_migrate", t=self.now, job=job_id,
+                                     from_node=node_id, moved=moved,
+                                     overhead_s=timings.total)
             still = self.cluster.residents(node_id).get(job_id, 0)
             if still:
                 target = job.spec.feasible(
@@ -281,6 +327,16 @@ class ElasticClusterController:
             job = self.pending.pop(0)
             if job.job_id not in self.cluster.jobs:
                 self.cluster.add_job(job)
+            if job.job_id not in self._submitted:
+                # failed jobs resubmit through this same path: one submit
+                # record per job, so trace lifecycle counts reconcile
+                self._submitted.add(job.job_id)
+                if self.tracer.enabled:
+                    self.tracer.emit("job_submit", t=self.now,
+                                     job=job.job_id,
+                                     priority=job.spec.priority,
+                                     min=job.spec.min_replicas,
+                                     max=job.spec.max_replicas)
             self.policy.on_new_job(self.cluster, job, self.now, self.actions)
 
     def _complete(self, job: JobState):
@@ -290,12 +346,21 @@ class ElasticClusterController:
         job.end_time = self.now
         job.replicas = 0
         self._record_util()
+        self.counters.inc("completions")
+        self.latency.observe_completed(job)
+        if self.tracer.enabled:
+            self.tracer.emit("job_complete", t=self.now, job=job.job_id,
+                             slots=freed)
         self.policy.on_job_complete(self.cluster, freed, self.now, self.actions)
 
     def run(self, max_ticks: int = 1_000_000) -> ScheduleMetrics:
+        if self.tracer.enabled and \
+                getattr(self.policy, "decisions", None) is None:
+            self.policy.decisions = DecisionLog(self.tracer)
         ticks = 0
         while ticks < max_ticks:
             ticks += 1
+            self.counters.inc("ticks")
             self._process_submissions()
             running = [j for j in self.cluster.jobs.values()
                        if j.status == JobStatus.RUNNING]
@@ -325,4 +390,18 @@ class ElasticClusterController:
                         live.trainer.save_disk(self.disk_store, job.job_id)
                 if live.trainer.done and job.status == JobStatus.RUNNING:
                     self._complete(job)
-        return compute_metrics(list(self.cluster.jobs.values()), self.util)
+        metrics = compute_metrics(list(self.cluster.jobs.values()), self.util,
+                                  latency=self.latency,
+                                  counters=self.counters.as_dict())
+        if self.tracer.enabled:
+            # failed-and-never-restarted jobs live in self.pending, outside
+            # cluster.jobs — reconcile drops against emitted submit records
+            completes = self.counters.get("completions")
+            self.tracer.emit("run_end", t=self.now, run=self.run_id,
+                             total_cost=metrics.total_cost,
+                             transfer_cost=metrics.transfer_cost,
+                             preempt_overhead_cost=metrics.preempt_overhead_cost,
+                             dropped=max(0, len(self._submitted) - completes),
+                             rescales=metrics.rescale_count)
+            self.tracer.flush()
+        return metrics

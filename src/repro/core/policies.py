@@ -66,6 +66,9 @@ class PolicyConfig:
 class ElasticPolicy:
     def __init__(self, cfg: PolicyConfig):
         self.cfg = cfg
+        # decision-audit sink (repro.obs.decisions.DecisionLog); None (the
+        # default) records nothing — traced runs wire one in at run start
+        self.decisions = None
 
     # -- extension hooks (see core/autoscale.py) ------------------------------
     def _priority(self, job: JobState, now: float) -> float:
@@ -96,6 +99,17 @@ class ElasticPolicy:
         return now - job.last_action >= self.cfg.rescale_gap
 
     # -- Figure 2: a new job is submitted ------------------------------------
+    def _admit_decision(self, job: JobState, now: float, verdict: str,
+                        free: int, granted: int = 0, alternatives=None):
+        if self.decisions is not None:
+            spec = job.spec
+            self.decisions.record(
+                "admit", now, verdict,
+                inputs={"job": spec.job_id, "priority": spec.priority,
+                        "free": free, "granted": granted,
+                        "min": spec.min_replicas, "max": spec.max_replicas},
+                alternatives=alternatives)
+
     def on_new_job(self, cluster: Cluster, job: JobState, now: float,
                    act: Actions) -> None:
         spec = job.spec
@@ -105,24 +119,40 @@ class ElasticPolicy:
             # start immediately; never shrink anyone if min fits (paper §3.2.1:
             # "run the higher priority job at its minimum replicas
             #  configuration to avoid a shrink call")
-            if not act.create(job, replicas):
+            if act.create(job, replicas):
+                self._admit_decision(job, now, "start", free, replicas)
+            else:
                 act.enqueue(job)    # capacity shrank under us (spot kill)
+                self._admit_decision(job, now, "enqueue_raced", free)
             return
 
         # dry pass: could shrinking strictly-lower/equal-priority running jobs
         # (outside their cool-down) free enough for min_replicas?
+        considered = [] if self.decisions is not None else None
         running_desc = self._sorted_desc(cluster.running_jobs(), now)
         num_to_free = spec.min_replicas - free
         for j in reversed(running_desc):              # lowest priority first
             if num_to_free <= 0:
                 break
             if self._priority(j, now) > self._priority(job, now):
+                if considered is not None:
+                    considered.append({"job": j.job_id, "eligible": False,
+                                       "why": "higher_priority"})
                 break                                 # priority guard
             if not self._gap_ok(j, now):
+                if considered is not None:
+                    considered.append({"job": j.job_id, "eligible": False,
+                                       "why": "rescale_gap"})
                 continue
-            num_to_free -= max(0, j.replicas - j.spec.min_replicas)
+            shrinkable = max(0, j.replicas - j.spec.min_replicas)
+            if considered is not None:
+                considered.append({"job": j.job_id, "eligible": True,
+                                   "shrinkable": shrinkable})
+            num_to_free -= shrinkable
         if num_to_free > 0:
             act.enqueue(job)
+            self._admit_decision(job, now, "enqueue", free,
+                                 alternatives=considered)
             return
 
         # real pass: shrink toward the NEW job's max configuration
@@ -146,11 +176,18 @@ class ElasticPolicy:
                     max_to_free -= freed
         if min_to_free > 0:
             act.enqueue(job)    # raced a cool-down; shouldn't normally happen
+            self._admit_decision(job, now, "enqueue_raced", free,
+                                 alternatives=considered)
             return
         free = self._avail(cluster)
         replicas = spec.feasible(min(free, spec.max_replicas))
-        if replicas < spec.min_replicas or not act.create(job, replicas):
+        if replicas >= spec.min_replicas and act.create(job, replicas):
+            self._admit_decision(job, now, "start_after_shrink", free,
+                                 replicas, alternatives=considered)
+        else:
             act.enqueue(job)
+            self._admit_decision(job, now, "enqueue", free,
+                                 alternatives=considered)
 
     # -- Figure 3: a job completed -------------------------------------------
     def on_job_complete(self, cluster: Cluster, freed_slots: int, now: float,
@@ -158,6 +195,8 @@ class ElasticPolicy:
         """Redistribute the freed slots (paper: numWorkers = freeWorkers(job))
         over running+queued jobs, highest priority first."""
         num = cluster.free_slots if self.cfg.redistribute_idle else freed_slots
+        offered = num
+        grants = [] if self.decisions is not None else None
         for j in self._sorted_desc(cluster.all_schedulable_jobs(), now):
             if num <= 0:
                 break
@@ -171,9 +210,19 @@ class ElasticPolicy:
                     if (j.status == JobStatus.RUNNING
                             and not self._should_expand(j, new_r, now)):
                         continue
-                    ok = (act.expand(j, new_r)
-                          if j.status == JobStatus.RUNNING
-                          else act.create(j, new_r))
+                    started = j.status != JobStatus.RUNNING
+                    ok = (act.create(j, new_r) if started
+                          else act.expand(j, new_r))
                     if ok:
                         num -= add
+                        if grants is not None:
+                            grants.append({
+                                "job": j.job_id, "to": new_r,
+                                "kind": "start" if started else "expand"})
         # any remainder simply stays free
+        if grants:
+            self.decisions.record(
+                "redistribute", now, f"granted_{len(grants)}",
+                inputs={"freed": freed_slots, "offered": offered,
+                        "leftover": num},
+                alternatives=grants)

@@ -24,6 +24,9 @@ from repro.core.metrics import ScheduleMetrics, UtilizationLog, compute_metrics
 from repro.core.perf_model import (JACOBI_SIZES, JacobiModel,
                                    PiecewiseScalingModel, RescaleModel)
 from repro.core.policies import ElasticPolicy, PolicyConfig
+from repro.obs.decisions import DecisionLog
+from repro.obs.stats import Counters, LatencyRecorder
+from repro.obs.trace import current_tracer
 
 
 @dataclass
@@ -58,6 +61,7 @@ class _SimActions:
         if job.start_time is None:
             job.start_time = sim.now
         sim.last_resume_s = 0.0
+        resumed = False
         if job.preempt_count and job.work_remaining < sim.workloads[
                 job.job_id].total_work:
             # resuming a preempted job: restart + restore-from-disk; the
@@ -67,9 +71,15 @@ class _SimActions:
             sim.last_resume_s = wl.rescale.resume_cost(replicas,
                                                        wl.data_bytes)
             job.overhead_until = sim.now + sim.last_resume_s
+            resumed = True
         job.last_progress_time = sim.now
         sim._schedule_completion(job)
         sim._record_util()
+        sim.latency.mark_started(job.job_id, sim.now)
+        if sim.tracer.enabled:
+            sim.tracer.emit("job_start", t=sim.now, job=job.job_id,
+                            slots=replicas, priority=job.spec.priority,
+                            resume=resumed, overhead_s=sim.last_resume_s)
         return True
 
     def expand(self, job: JobState, replicas: int) -> bool:
@@ -82,6 +92,7 @@ class _SimActions:
         sim = self.sim
         if replicas == job.replicas:
             return True
+        from_replicas = job.replicas
         delta = replicas - job.replicas
         # shrinks always succeed — even when free_slots is negative because a
         # node was yanked (the cloud layer shrinks victims to resolve exactly
@@ -106,10 +117,19 @@ class _SimActions:
         sim.total_overhead += overhead
         sim._schedule_completion(job)
         sim._record_util()
+        sim.counters.inc("rescales")
+        if sim.tracer.enabled:
+            sim.tracer.emit("job_rescale", t=sim.now, job=job.job_id,
+                            **{"from": from_replicas, "to": replicas},
+                            overhead_s=overhead)
         return True
 
     def enqueue(self, job: JobState) -> None:
         job.status = JobStatus.QUEUED
+        sim = self.sim
+        sim.latency.mark_queued(job.job_id, sim.now)
+        if sim.tracer.enabled:
+            sim.tracer.emit("job_queue", t=sim.now, job=job.job_id)
 
     def preempt(self, job: JobState) -> bool:
         """Checkpoint-to-disk preemption (core/autoscale.PreemptingPolicy)."""
@@ -122,6 +142,12 @@ class _SimActions:
         sim.last_preempt_ckpt_s = wl.rescale.preempt_cost(job.replicas,
                                                           wl.data_bytes)
         sim.now += sim.last_preempt_ckpt_s
+        sim.counters.inc("preemptions")
+        sim.latency.mark_queued(job.job_id, sim.now)
+        if sim.tracer.enabled:
+            sim.tracer.emit("job_preempt", t=sim.now, job=job.job_id,
+                            slots=job.replicas,
+                            ckpt_s=sim.last_preempt_ckpt_s)
         sim.cluster.evict(job.job_id)
         job.status = JobStatus.QUEUED
         job.replicas = 0
@@ -138,7 +164,7 @@ class _SimActions:
 class Simulator:
     def __init__(self, total_slots: int, policy_cfg: PolicyConfig, *,
                  placement: str = "pack",
-                 slots_per_node: Optional[int] = None):
+                 slots_per_node: Optional[int] = None, tracer=None):
         self.cluster = Cluster(total_slots, slots_per_node=slots_per_node,
                                placement=placement)
         self.policy = ElasticPolicy(policy_cfg)
@@ -151,6 +177,17 @@ class Simulator:
         self.last_preempt_ckpt_s = 0.0  # ckpt seconds of the latest preempt
         self.last_resume_s = 0.0        # restore seconds of the latest create
         self._evict_prefer: Optional[str] = None   # forced-shrink target node
+        # observability (repro.obs): explicit tracer wins, else whatever
+        # `obs.trace.install` put up, else the no-op null tracer
+        self.tracer = tracer if tracer is not None else current_tracer()
+        self.counters = Counters()
+        self.latency = LatencyRecorder()
+        self.run_id = self.tracer.next_run_id()
+        if self.tracer.enabled:
+            # emitted from __init__ so subclass capacity bootstrap (cloud
+            # node_up records) lands inside the run span
+            self.tracer.emit("run_start", t=0.0, run=self.run_id,
+                             slots=total_slots, sim=type(self).__name__)
 
     # -- bookkeeping ---------------------------------------------------------
     def _record_util(self):
@@ -190,14 +227,24 @@ class Simulator:
                         tiebreak=(-spec.priority, spec.job_id))
 
     def run(self) -> ScheduleMetrics:
+        if self.tracer.enabled:
+            self._wire_decisions()
+        counters = self.counters
         while len(self.queue):
             if self._should_stop():
                 break
             ev = self.queue.pop()
             self.now = max(self.now, ev.time)
+            counters.inc("events")
             if ev.kind == "submit":
                 job: JobState = ev.payload
                 self.cluster.add_job(job)
+                if self.tracer.enabled:
+                    self.tracer.emit("job_submit", t=self.now,
+                                     job=job.job_id,
+                                     priority=job.spec.priority,
+                                     min=job.spec.min_replicas,
+                                     max=job.spec.max_replicas)
                 # policies may consult work_remaining (cost-benefit): sync all
                 for j in self.cluster.running_jobs():
                     self._sync_progress(j)
@@ -218,6 +265,11 @@ class Simulator:
                 job.end_time = self.now
                 job.replicas = 0
                 self._record_util()
+                counters.inc("completions")
+                self.latency.observe_completed(job)
+                if self.tracer.enabled:
+                    self.tracer.emit("job_complete", t=self.now,
+                                     job=job.job_id, slots=freed)
                 for j in self.cluster.running_jobs():
                     self._sync_progress(j)
                 self.policy.on_job_complete(self.cluster, freed, self.now,
@@ -226,7 +278,31 @@ class Simulator:
                 # extension point: repro.cloud adds node_up / node_down /
                 # spot_kill / autoscale_tick event kinds
                 self._handle_event(ev)
-        return compute_metrics(list(self.cluster.jobs.values()), self.util)
+        metrics = self._final_metrics()
+        if self.tracer.enabled:
+            self.tracer.emit(
+                "run_end", t=self.now, run=self.run_id,
+                total_cost=metrics.total_cost,
+                transfer_cost=metrics.transfer_cost,
+                preempt_overhead_cost=metrics.preempt_overhead_cost,
+                dropped=metrics.dropped_jobs,
+                rescales=metrics.rescale_count)
+            self.tracer.flush()
+        return metrics
+
+    def _final_metrics(self) -> ScheduleMetrics:
+        """Extension hook: CloudSimulator closes its cost ledger here so the
+        base run loop can emit one ``run_end`` record with final dollars."""
+        return compute_metrics(list(self.cluster.jobs.values()), self.util,
+                               latency=self.latency,
+                               counters=self.counters.as_dict())
+
+    def _wire_decisions(self) -> None:
+        """Bind a DecisionLog to every decision-carrying component (policies
+        are often swapped after __init__, so this runs at the top of run())."""
+        log = DecisionLog(self.tracer)
+        if getattr(self.policy, "decisions", None) is None:
+            self.policy.decisions = log
 
     def _handle_event(self, ev) -> None:
         raise ValueError(f"unknown event kind {ev.kind!r}")

@@ -1,0 +1,19 @@
+"""Flight recorder for the scheduler stack (observability layer).
+
+- :mod:`repro.obs.trace`     structured JSONL span/event records + null tracer
+- :mod:`repro.obs.decisions` decision-audit records (inputs, alternatives,
+  verdict) at every policy/autoscaler/bidder choice point
+- :mod:`repro.obs.stats`     streaming P2 quantiles, counters, latency recorder
+- :mod:`repro.obs.audit`     trace replayer re-deriving conservation invariants
+- :mod:`repro.obs.timeline`  text Gantt renderer over a trace
+"""
+from repro.obs.decisions import DecisionLog, decision_records
+from repro.obs.stats import Counters, LatencyRecorder, P2Quantile
+from repro.obs.trace import (NULL_TRACER, NullTracer, Tracer, current_tracer,
+                             install)
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "install", "current_tracer",
+    "DecisionLog", "decision_records",
+    "P2Quantile", "Counters", "LatencyRecorder",
+]

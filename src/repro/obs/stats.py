@@ -1,0 +1,179 @@
+"""Streaming statistics: P2 quantiles, counters, per-priority latency.
+
+:class:`P2Quantile` is the Jain & Chlamtac (CACM 1985) P-squared estimator:
+one quantile in O(1) memory (five markers), no sample buffer — so every
+simulation can afford p50/p95/p99 of response/completion/queue-wait per
+priority class, always on, without holding per-job latency arrays.
+
+:class:`Counters` is the flat counter registry ``Simulator.run`` ticks per
+event — ``events / sec`` falls out of the registry plus wall-clock, which is
+what ``benchmarks/bench_simcore.py`` turns into the repo's perf trajectory.
+
+:class:`LatencyRecorder` folds job lifecycle timestamps into the estimators
+and renders them as the flat ``ScheduleMetrics.percentiles`` mapping
+(``resp_p99``, ``wait_p95_prio5``, ...).
+"""
+from __future__ import annotations
+
+import bisect
+from typing import TYPE_CHECKING, Dict, Optional, Tuple
+
+if TYPE_CHECKING:       # repro.core imports this module: no import cycle
+    from repro.core.job import JobState
+
+
+class P2Quantile:
+    """Single-quantile P-squared estimator.  Exact for the first five
+    observations; afterwards five markers track (min, q/2, q, (1+q)/2, max)
+    with parabolic (fallback linear) height adjustment."""
+
+    __slots__ = ("q", "_n", "_heights", "_pos", "_npos", "_dn")
+
+    def __init__(self, q: float):
+        assert 0.0 < q < 1.0, q
+        self.q = q
+        self._n = 0
+        self._heights = []                       # type: list
+        self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+        self._npos = [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0]
+        self._dn = (0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0)
+
+    def observe(self, x: float) -> None:
+        self._n += 1
+        h = self._heights
+        if self._n <= 5:
+            bisect.insort(h, x)
+            return
+        # locate the cell, clamping the extremes
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = 0
+            while k < 3 and h[k + 1] <= x:
+                k += 1
+        pos, npos = self._pos, self._npos
+        for i in range(k + 1, 5):
+            pos[i] += 1.0
+        for i in range(5):
+            npos[i] += self._dn[i]
+        for i in (1, 2, 3):
+            d = npos[i] - pos[i]
+            if ((d >= 1.0 and pos[i + 1] - pos[i] > 1.0)
+                    or (d <= -1.0 and pos[i - 1] - pos[i] < -1.0)):
+                d = 1.0 if d > 0.0 else -1.0
+                hp = self._parabolic(i, d)
+                if not (h[i - 1] < hp < h[i + 1]):
+                    hp = self._linear(i, d)
+                h[i] = hp
+                pos[i] += d
+
+    def _parabolic(self, i: int, d: float) -> float:
+        h, n = self._heights, self._pos
+        return h[i] + d / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + d) * (h[i + 1] - h[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - d) * (h[i] - h[i - 1]) / (n[i] - n[i - 1]))
+
+    def _linear(self, i: int, d: float) -> float:
+        h, n = self._heights, self._pos
+        j = i + int(d)
+        return h[i] + d * (h[j] - h[i]) / (n[j] - n[i])
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    def value(self) -> float:
+        if self._n == 0:
+            return 0.0
+        if self._n <= 5:                # exact empirical quantile
+            idx = max(0, min(self._n - 1, int(self.q * self._n)))
+            return self._heights[idx]
+        return self._heights[2]
+
+
+class Counters:
+    """Flat monotonic counter registry."""
+
+    __slots__ = ("_c",)
+
+    def __init__(self):
+        self._c: Dict[str, int] = {}
+
+    def inc(self, name: str, n: int = 1) -> None:
+        c = self._c
+        c[name] = c.get(name, 0) + n
+
+    def get(self, name: str) -> int:
+        return self._c.get(name, 0)
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self._c)
+
+
+#: latency metrics tracked per job: response (submit -> first start),
+#: completion (submit -> end), queue wait (total time spent QUEUED)
+QUANTILES = (0.5, 0.95, 0.99)
+
+
+class LatencyRecorder:
+    """Per-priority-class streaming latency percentiles.
+
+    ``mark_queued``/``mark_started`` bracket QUEUED episodes (initial queueing
+    and preempt -> resume gaps both count as queue wait);
+    ``observe_completed`` folds the finished job's response/completion/wait
+    into the aggregate estimators and the job's priority-class estimators.
+    """
+
+    def __init__(self):
+        # (metric, priority-or-None) -> {q: estimator}
+        self._est: Dict[Tuple[str, Optional[int]],
+                        Dict[float, P2Quantile]] = {}
+        self._queued_at: Dict[str, float] = {}
+        self._wait: Dict[str, float] = {}
+        self.completed = 0
+
+    def mark_queued(self, job_id: str, t: float) -> None:
+        self._queued_at.setdefault(job_id, t)
+
+    def mark_started(self, job_id: str, t: float) -> None:
+        q = self._queued_at.pop(job_id, None)
+        if q is not None:
+            self._wait[job_id] = self._wait.get(job_id, 0.0) + max(0.0, t - q)
+
+    def observe_completed(self, job: "JobState") -> None:
+        from repro.core.job import completion_time, response_time
+        self.completed += 1
+        resp = response_time(job)
+        comp = completion_time(job)
+        wait = self._wait.pop(job.job_id, 0.0)
+        self._queued_at.pop(job.job_id, None)
+        for prio in (None, job.spec.priority):
+            self._feed(("resp", prio), resp)
+            self._feed(("compl", prio), comp)
+            self._feed(("wait", prio), wait)
+
+    def _feed(self, key: Tuple[str, Optional[int]],
+              x: Optional[float]) -> None:
+        if x is None:
+            return
+        ests = self._est.get(key)
+        if ests is None:
+            ests = self._est[key] = {q: P2Quantile(q) for q in QUANTILES}
+        for est in ests.values():
+            est.observe(x)
+
+    def percentile_fields(self) -> Dict[str, float]:
+        """Flat mapping for ``ScheduleMetrics.percentiles``: ``resp_p99``
+        (all classes) and ``resp_p99_prio<k>`` (one priority class), for
+        each of resp/compl/wait x p50/p95/p99."""
+        out: Dict[str, float] = {}
+        for (metric, prio) in sorted(
+                self._est, key=lambda k: (k[0], k[1] is not None, k[1] or 0)):
+            suffix = "" if prio is None else f"_prio{prio}"
+            for q, est in self._est[(metric, prio)].items():
+                out[f"{metric}_p{int(round(q * 100))}{suffix}"] = est.value()
+        return out

@@ -1,0 +1,128 @@
+"""Structured JSONL flight recorder.
+
+One :class:`Tracer` receives every span/event record a simulator (or the live
+controller) emits: job lifecycle (submit -> queue -> start -> rescale ->
+preempt -> resume -> complete, with slot deltas and overhead seconds), node
+lifecycle (boot / kill / cordon / drain / removal), zone reclaims, itemized
+cost events, and the decision-audit records of :mod:`repro.obs.decisions`.
+
+Records are flat JSON objects with two universal keys — ``kind`` (the record
+type) and ``t`` (virtual time) — plus kind-specific fields.  The schema is
+documented in README.md ("Observability") and consumed by
+:mod:`repro.obs.audit` (invariant replay) and :mod:`repro.obs.timeline`
+(text Gantt).
+
+Disabled runs pay ~nothing: the default is the module-level
+:data:`NULL_TRACER`, whose ``enabled`` is False so instrumented code guards
+every emission with one attribute check (``if tracer.enabled: ...``).
+``bench_simcore.py`` measures the residual cost of those guards on the
+table1 policy grid.
+
+Benchmarks install a tracer process-wide with::
+
+    with install(Tracer(path)):
+        run_variant(...)        # Simulator picks it up via current_tracer()
+
+so deep call stacks (benchmark tables, replay helpers) need no per-layer
+tracer threading.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+from typing import Any, Dict, Iterator, List, Optional
+
+
+class NullTracer:
+    """No-op sink; ``enabled`` is False so hot paths skip record building."""
+
+    enabled = False
+    __slots__ = ()
+
+    def emit(self, kind: str, t: float = 0.0, **fields) -> None:
+        pass
+
+    def next_run_id(self) -> int:
+        return 0
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+#: process-wide default sink (see :func:`current_tracer`)
+NULL_TRACER = NullTracer()
+
+
+class Tracer:
+    """JSONL sink.  With ``path`` records stream to disk; without one (or
+    with ``keep=True``) they accumulate in ``records`` for in-process
+    consumers (tests, the audit/timeline helpers)."""
+
+    enabled = True
+
+    def __init__(self, path: Optional[str] = None, *,
+                 keep: Optional[bool] = None):
+        self.path = path
+        self._fh = open(path, "w") if path else None
+        keep = keep if keep is not None else path is None
+        self.records: Optional[List[Dict[str, Any]]] = [] if keep else None
+        self._runs = 0
+
+    def next_run_id(self) -> int:
+        """Monotone run id so several simulations can share one file; the
+        auditor/timeline split the stream on ``run_start`` records."""
+        self._runs += 1
+        return self._runs
+
+    def emit(self, kind: str, t: float = 0.0, **fields) -> None:
+        rec: Dict[str, Any] = {"kind": kind, "t": t}
+        rec.update(fields)
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        if self.records is not None:
+            self.records.append(rec)
+
+    def flush(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "Tracer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @staticmethod
+    def load(path: str) -> List[Dict[str, Any]]:
+        with open(path) as fh:
+            return [json.loads(line) for line in fh if line.strip()]
+
+
+_CURRENT: Optional[Tracer] = None
+
+
+def current_tracer():
+    """The process-installed tracer, or :data:`NULL_TRACER`.  Simulators
+    default to this at construction, so ``install`` wraps whole benchmark
+    modules without touching their signatures."""
+    return _CURRENT if _CURRENT is not None else NULL_TRACER
+
+
+@contextlib.contextmanager
+def install(tracer: Tracer) -> Iterator[Tracer]:
+    """Make ``tracer`` the process default for the duration of the block."""
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = tracer
+    try:
+        yield tracer
+    finally:
+        _CURRENT = prev

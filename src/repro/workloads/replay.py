@@ -106,14 +106,14 @@ def _prepare(variant: str, specs: List[JobSpec], cfg: ReplayConfig):
     return variant_setup(variant, specs, rescale_gap=cfg.rescale_gap)
 
 
-def replay_variant(trace: Trace, variant: str, cfg: ReplayConfig
-                   ) -> ScheduleMetrics:
+def replay_variant(trace: Trace, variant: str, cfg: ReplayConfig,
+                   *, tracer=None) -> ScheduleMetrics:
     """Replay through the fixed-capacity :class:`Simulator` (the paper's
     §4.3 frame) at ``cfg.cluster_slots`` slots."""
     pairs = compile_trace(trace, cfg)
     wls: Dict[str, SimWorkload] = {s.job_id: w for s, w in pairs}
     specs, pcfg, policy = _prepare(variant, [s for s, _ in pairs], cfg)
-    sim = Simulator(cfg.cluster_slots, pcfg)
+    sim = Simulator(cfg.cluster_slots, pcfg, tracer=tracer)
     if policy is not None:
         sim.policy = policy
     for s in specs:
@@ -125,8 +125,8 @@ def replay_cloud(trace: Trace, cfg: ReplayConfig, provider: CloudProvider,
                  *, variant: str = "elastic",
                  autoscaler: Optional[NodeAutoscaler] = None,
                  placement: str = "pack",
-                 pre_run: Optional[Callable[[CloudSimulator], None]] = None
-                 ) -> CloudSimulator:
+                 pre_run: Optional[Callable[[CloudSimulator], None]] = None,
+                 tracer=None) -> CloudSimulator:
     """Replay through :class:`CloudSimulator` (dynamic capacity, spot kills,
     dollars).  Returns the finished simulator — ``.run()`` has been called —
     so callers can read both the metrics and the cost report / kill blasts.
@@ -139,7 +139,7 @@ def replay_cloud(trace: Trace, cfg: ReplayConfig, provider: CloudProvider,
     wls: Dict[str, SimWorkload] = {s.job_id: w for s, w in pairs}
     specs, pcfg, policy = _prepare(variant, [s for s, _ in pairs], cfg)
     sim = CloudSimulator(provider, pcfg, autoscaler=autoscaler,
-                         policy=policy, placement=placement)
+                         policy=policy, placement=placement, tracer=tracer)
     for s in specs:
         sim.submit(s, wls[s.job_id])
     if pre_run is not None:

@@ -1,0 +1,111 @@
+"""Property tests for the step-function integrator behind UtilizationLog.
+
+``_integrate`` is the one piece of arithmetic every utilization /
+fragmentation figure flows through; here hypothesis drives it against a
+brute-force Riemann reference over adversarial event sets — events before,
+at and after the window, duplicate timestamps, zero-width windows.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.metrics import UtilizationLog, _coalesce, _integrate  # noqa: E402
+
+TIMES = st.floats(min_value=-50.0, max_value=150.0,
+                  allow_nan=False, allow_infinity=False)
+VALUES = st.floats(min_value=0.0, max_value=64.0,
+                   allow_nan=False, allow_infinity=False)
+
+
+def _step_value(events, t, initial):
+    """Step-series value at time t: last event at or before t."""
+    cur = initial
+    for et, ev in events:
+        if et <= t:
+            cur = ev
+        else:
+            break
+    return cur
+
+
+def _brute_force(events, t0, t1, initial):
+    """Exact area: split [t0, t1] at every event timestamp and sum the
+    constant rectangles (sampling each piece just after its left edge)."""
+    cuts = sorted({t0, t1, *(t for t, _ in events if t0 < t < t1)})
+    area = 0.0
+    for a, b in zip(cuts, cuts[1:]):
+        area += _step_value(events, a, initial) * (b - a)
+    return area
+
+
+def _sorted_events(draw_events):
+    """Order by time; later duplicates win, matching _coalesce semantics."""
+    out = []
+    for t, v in sorted(draw_events, key=lambda e: e[0]):
+        _coalesce(out, t, v)
+    return out
+
+
+@settings(max_examples=300, deadline=None)
+@given(events=st.lists(st.tuples(TIMES, VALUES), max_size=12),
+       t0=TIMES, t1=TIMES, initial=VALUES)
+def test_integrate_matches_brute_force(events, t0, t1, initial):
+    if t1 < t0:
+        t0, t1 = t1, t0
+    evs = _sorted_events(events)
+    got = _integrate(evs, t0, t1, initial)
+    want = _brute_force(evs, t0, t1, initial)
+    assert got == pytest.approx(want, rel=1e-9, abs=1e-7)
+
+
+@settings(max_examples=100, deadline=None)
+@given(events=st.lists(st.tuples(TIMES, VALUES), max_size=8), t=TIMES,
+       initial=VALUES)
+def test_integrate_zero_width_window_is_zero(events, t, initial):
+    assert _integrate(_sorted_events(events), t, t, initial) == 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(events=st.lists(st.tuples(TIMES, VALUES), max_size=8),
+       t0=TIMES, t1=TIMES, initial=VALUES)
+def test_integrate_additive_over_split(events, t0, t1, initial):
+    """∫[t0,t1] == ∫[t0,mid] + ∫[mid,t1] — no area lost at the seam."""
+    if t1 < t0:
+        t0, t1 = t1, t0
+    mid = (t0 + t1) / 2.0
+    evs = _sorted_events(events)
+    whole = _integrate(evs, t0, t1, initial)
+    parts = (_integrate(evs, t0, mid, initial)
+             + _integrate(evs, mid, t1, initial))
+    assert whole == pytest.approx(parts, rel=1e-9, abs=1e-7)
+
+
+@settings(max_examples=100, deadline=None)
+@given(draws=st.lists(st.tuples(TIMES, VALUES), min_size=1, max_size=20))
+def test_coalesce_keeps_last_value_per_timestamp(draws):
+    series = []
+    for t, v in sorted(draws, key=lambda e: e[0]):
+        _coalesce(series, t, v)
+    # strictly increasing timestamps, each carrying the LAST value drawn
+    assert all(a < b for (a, _), (b, _) in zip(series, series[1:]))
+    last = {}
+    for t, v in sorted(draws, key=lambda e: e[0]):
+        last[t] = v
+    assert series == sorted(last.items())
+
+
+@settings(max_examples=100, deadline=None)
+@given(events=st.lists(
+    st.tuples(st.floats(min_value=0.0, max_value=100.0, allow_nan=False),
+              st.integers(min_value=0, max_value=32)), max_size=10),
+    t1=st.floats(min_value=1.0, max_value=100.0, allow_nan=False))
+def test_utilization_log_average_bounded(events, t1):
+    log = UtilizationLog(total_slots=32)
+    for t, used in sorted(events, key=lambda e: e[0]):
+        log.record(t, used)
+    avg = log.average(0.0, t1)
+    assert 0.0 <= avg <= 1.0 + 1e-9

@@ -1,0 +1,306 @@
+"""Observability subsystem (repro.obs): streaming P2 percentiles, the JSONL
+flight recorder + install() hook, decision-audit completeness (every bidder
+zone flip and every spot-kill victim has a matching structured record), and
+the machine-readable ScheduleMetrics surface the benchmark tables emit."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.cloud import (SPOT, AutoscalerConfig, BidderConfig, CloudProvider,
+                         CloudSimulator, DemandAwareBidder, NodeAutoscaler,
+                         NodePool)
+from repro.core.autoscale import PreemptingPolicy
+from repro.core.job import JobSpec
+from repro.core.perf_model import PiecewiseScalingModel, RescaleModel
+from repro.core.policies import PolicyConfig
+from repro.core.simulator import (SimWorkload, Simulator, make_jacobi_jobs,
+                                  run_variant)
+from repro.obs import (NULL_TRACER, Counters, LatencyRecorder, P2Quantile,
+                       Tracer, current_tracer, decision_records, install)
+
+
+def wl(steps=100.0, t1=1.0, t_many=1.0, data=1e9):
+    return SimWorkload(
+        scaling=PiecewiseScalingModel(((1.0, t1), (64.0, t_many))),
+        total_work=steps, data_bytes=data, rescale=RescaleModel())
+
+
+# ---------------------------------------------------------------------------
+# P2 streaming quantiles
+# ---------------------------------------------------------------------------
+
+def test_p2_exact_for_small_samples():
+    est = P2Quantile(0.5)
+    for x in (5.0, 1.0, 3.0):
+        est.observe(x)
+    assert est.value() == 3.0           # exact median of {1,3,5}
+    assert est.count == 3
+
+
+def test_p2_empty_is_zero():
+    assert P2Quantile(0.99).value() == 0.0
+
+
+@pytest.mark.parametrize("q", [0.5, 0.95, 0.99])
+def test_p2_tracks_uniform_distribution(q):
+    rng = np.random.default_rng(42)
+    xs = rng.uniform(0.0, 100.0, size=20_000)
+    est = P2Quantile(q)
+    for x in xs:
+        est.observe(float(x))
+    exact = float(np.quantile(xs, q))
+    assert est.value() == pytest.approx(exact, abs=2.5)
+
+
+def test_p2_tracks_heavy_tail():
+    rng = np.random.default_rng(7)
+    xs = rng.lognormal(mean=3.0, sigma=1.0, size=20_000)
+    est = P2Quantile(0.95)
+    for x in xs:
+        est.observe(float(x))
+    exact = float(np.quantile(xs, 0.95))
+    assert est.value() == pytest.approx(exact, rel=0.08)
+
+
+def test_counters_registry():
+    c = Counters()
+    c.inc("events")
+    c.inc("events", 2)
+    assert c.get("events") == 3
+    assert c.get("missing") == 0
+    assert c.as_dict() == {"events": 3}
+
+
+def test_latency_recorder_prio_classes():
+    class J:
+        pass
+    rec = LatencyRecorder()
+    rec.mark_queued("a", 0.0)
+    rec.mark_started("a", 10.0)
+    job = J()
+    job.job_id = "a"
+    job.spec = J()
+    job.spec.priority = 5
+    job.spec.submit_time = 0.0
+    job.start_time = 10.0
+    job.end_time = 30.0
+    rec.observe_completed(job)
+    fields = rec.percentile_fields()
+    assert fields["resp_p99"] == 10.0
+    assert fields["compl_p50_prio5"] == 30.0
+    assert fields["wait_p95"] == 10.0
+
+
+# ---------------------------------------------------------------------------
+# Tracer + install hook
+# ---------------------------------------------------------------------------
+
+def test_tracer_jsonl_round_trip(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    with Tracer(path) as tr:
+        tr.emit("run_start", t=0.0, run=tr.next_run_id(), slots=8)
+        tr.emit("job_start", t=1.5, job="j0", slots=4)
+    records = Tracer.load(path)
+    assert records == [
+        {"kind": "run_start", "t": 0.0, "run": 1, "slots": 8},
+        {"kind": "job_start", "t": 1.5, "job": "j0", "slots": 4}]
+
+
+def test_install_scopes_and_restores():
+    assert current_tracer() is NULL_TRACER
+    tr = Tracer()                        # in-memory
+    with install(tr):
+        assert current_tracer() is tr
+        inner = Tracer()
+        with install(inner):
+            assert current_tracer() is inner
+        assert current_tracer() is tr
+    assert current_tracer() is NULL_TRACER
+
+
+def test_null_tracer_is_inert():
+    NULL_TRACER.emit("anything", t=1.0, x=2)
+    assert NULL_TRACER.next_run_id() == 0
+    assert not NULL_TRACER.enabled
+
+
+def test_simulator_picks_up_installed_tracer():
+    specs = make_jacobi_jobs(seed=3, n_jobs=4, submission_gap=60.0)
+    with install(Tracer()) as tr:
+        run_variant("elastic", specs, total_slots=32)
+    kinds = {r["kind"] for r in tr.records}
+    assert {"run_start", "job_submit", "job_start", "job_complete",
+            "run_end"} <= kinds
+    # untraced runs stay silent
+    run_variant("elastic", specs, total_slots=32)
+    assert current_tracer() is NULL_TRACER
+
+
+# ---------------------------------------------------------------------------
+# ScheduleMetrics machine-readable surface
+# ---------------------------------------------------------------------------
+
+def test_metrics_percentiles_and_counters_populated():
+    specs = make_jacobi_jobs(seed=7, n_jobs=8, submission_gap=60.0)
+    m = run_variant("elastic", specs, total_slots=32)
+    assert m.counters["completions"] == 8
+    assert m.counters["events"] > 0
+    assert "resp_p99" in m.percentiles
+    assert "wait_p50" in m.percentiles
+    # at least one per-priority class key rides along
+    assert any(k.startswith("resp_p99_prio") for k in m.percentiles)
+    # percentile ordering is internally consistent
+    assert m.percentiles["resp_p50"] <= m.percentiles["resp_p99"] + 1e-9
+
+
+def test_metrics_to_dict_is_json_safe():
+    specs = make_jacobi_jobs(seed=7, n_jobs=4, submission_gap=60.0)
+    m = run_variant("elastic", specs, total_slots=32)
+    d = m.to_dict()
+    assert d["rescale_count"] == m.rescale_count
+    assert d["percentiles"] == m.percentiles
+    json.dumps(d)                        # round-trippable
+
+
+def test_metrics_kv_flattens_and_skips_missing():
+    from benchmarks.common import metrics_kv
+    specs = make_jacobi_jobs(seed=7, n_jobs=4, submission_gap=60.0)
+    m = run_variant("elastic", specs, total_slots=32)
+    s = metrics_kv(m, "total_time", "percentiles.resp_p99",
+                   "percentiles.no_such_key", prefixes=("counters.events",))
+    assert "total_time=" in s and "resp_p99=" in s and "events=" in s
+    assert "no_such_key" not in s
+
+
+# ---------------------------------------------------------------------------
+# Decision-audit records
+# ---------------------------------------------------------------------------
+
+def test_admit_and_redistribute_decisions_recorded():
+    specs = make_jacobi_jobs(seed=7, n_jobs=8, submission_gap=60.0)
+    with install(Tracer()) as tr:
+        run_variant("elastic", specs, total_slots=32)
+    admits = decision_records(tr.records, "admit")
+    assert len(admits) == 8              # one verdict per submitted job
+    for d in admits:
+        assert d["verdict"] in ("start", "enqueue", "enqueue_raced",
+                                "start_after_shrink")
+        assert {"job", "priority", "free", "min", "max"} <= set(d["inputs"])
+    # a 32-slot cluster under 8 jobs redistributes at least once
+    assert decision_records(tr.records, "redistribute")
+
+
+def test_preempt_select_decision_names_victims():
+    pcfg = PolicyConfig(rescale_gap=0.0)
+    sim_tr = Tracer()
+    with install(sim_tr):
+        sim = Simulator(8, pcfg)
+        sim.policy = PreemptingPolicy(pcfg)
+        sim.submit(JobSpec("lo", 1, 8, 8, 0.0), wl(100))
+        sim.submit(JobSpec("hi", 5, 8, 8, 1.0), wl(50))
+        sim.run()
+    sel = decision_records(sim_tr.records, "preempt_select")
+    assert len(sel) == 1
+    d = sel[0]
+    assert d["verdict"] == "preempted_started"
+    assert d["inputs"]["job"] == "hi"
+    assert d["inputs"]["victims"] == ["lo"]
+    assert any(a.get("eligible") for a in d["alternatives"])
+
+
+def _bidding_sim(tracer=None):
+    """Three-zone fleet with one hot zone (table6's one_hot in miniature)."""
+    pools = [NodePool("od", slots_per_node=8, price_per_slot_hour=0.048,
+                      boot_latency=60.0, teardown_delay=30.0,
+                      initial_nodes=1, max_nodes=2, zone="east-1a")]
+    for zone, init in (("east-1b", 1), ("east-1c", 1)):
+        pools.append(NodePool(
+            f"sp-{zone}", slots_per_node=8, price_per_slot_hour=0.016,
+            market=SPOT, boot_latency=60.0, teardown_delay=30.0,
+            initial_nodes=init, max_nodes=4, spot_lifetime_mean=1e12,
+            zone=zone))
+    prov = CloudProvider(
+        pools, seed=3,
+        zone_reclaim_interval={"east-1b": 300.0}, zone_reclaim_fraction=1.0)
+    bidder = DemandAwareBidder(BidderConfig(
+        half_life=900.0, hysteresis=0.25, risk_aversion=10.0,
+        min_evidence_kills=1.0, spot_fraction_max=0.5))
+    asc = NodeAutoscaler(prov, AutoscalerConfig(
+        tick_interval=30.0, scale_up_cooldown=30.0, scale_down_cooldown=120.0,
+        idle_timeout=240.0, spot_fraction=0.6, bidder=bidder))
+    pcfg = PolicyConfig(rescale_gap=0.0)
+    sim = CloudSimulator(prov, pcfg, autoscaler=asc, tracer=tracer)
+    for i in range(6):
+        sim.submit(JobSpec(f"j{i}", 1 + i % 3, 8, 8, 60.0 * i), wl(1500))
+    return sim
+
+
+def test_every_bid_flip_has_a_decision_record_with_risk_inputs():
+    tr = Tracer()
+    sim = _bidding_sim(tracer=tr)
+    sim.run()
+    flips = decision_records(tr.records, "bid_flip")
+    assert sim.bidder.adjustments > 0, "scenario must exercise the bidder"
+    assert len(flips) == sim.bidder.adjustments
+    for d in flips:
+        assert d["verdict"] in ("open", "close")
+        ins = d["inputs"]
+        # the flip carries the risk-vs-discount evidence that triggered it
+        assert {"zone", "risk_ratio", "risk_cost_rate", "kill_rate",
+                "savings_rate", "close_above", "open_below"} <= set(ins)
+    # the hot zone closes at least once under 300 s whole-zone wipes
+    assert any(d["verdict"] == "close" and
+               d["inputs"]["zone"] == "east-1b" for d in flips)
+
+
+def test_scale_decisions_record_preference_and_attempts():
+    tr = Tracer()
+    sim = _bidding_sim(tracer=tr)
+    sim.run()
+    ups = decision_records(tr.records, "scale_up")
+    assert ups
+    for d in ups:
+        assert d["verdict"] in ("provisioned", "blocked")
+        assert isinstance(d["inputs"]["preference"], list)
+        assert d["alternatives"] is None or isinstance(d["alternatives"], list)
+
+
+# ---------------------------------------------------------------------------
+# Per-victim kill-blast spans
+# ---------------------------------------------------------------------------
+
+def test_every_spot_kill_victim_has_a_resolution_span():
+    tr = Tracer()
+    sim = _bidding_sim(tracer=tr)
+    sim.run()
+    kills = [r for r in tr.records if r["kind"] == "spot_kill"]
+    assert kills, "scenario must produce spot kills"
+    recs = tr.records
+    resolved_kinds = ("job_migrate", "job_rescale", "job_preempt", "job_fail",
+                      "job_complete")
+    saw_victim = False
+    for k in kills:
+        i = recs.index(k)
+        end = next(j for j in range(i + 1, len(recs))
+                   if recs[j]["kind"] == "kill_blast_end"
+                   and recs[j]["node"] == k["node"])
+        window = recs[i + 1:end]
+        for victim in k["residents"]:
+            saw_victim = True
+            assert any(r["kind"] in resolved_kinds and r.get("job") == victim
+                       for r in window), \
+                f"victim {victim} of {k['node']} has no resolution span"
+    assert saw_victim, "at least one kill must displace a resident"
+
+
+def test_timeline_renders_traced_run():
+    from repro.obs.timeline import render_last_run
+    specs = make_jacobi_jobs(seed=7, n_jobs=6, submission_gap=60.0)
+    with install(Tracer()) as tr:
+        run_variant("elastic", specs, total_slots=32)
+    art = render_last_run(tr.records, width=48)
+    assert "timeline" in art and "capacity" in art
+    assert "#" in art                     # at least one job ran
+    for s in specs:
+        assert s.job_id[:20] in art

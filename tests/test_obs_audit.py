@@ -1,0 +1,197 @@
+"""Trace auditor (repro.obs.audit): real traced runs PASS the conservation
+invariants, and tampered traces — double-booked slots, shaved dollars,
+vanished resumes, unresolved kill victims — are caught.  The auditor sees
+nothing but the JSONL records, so these tests are the proof that the trace
+alone carries enough to re-derive the physics."""
+import copy
+
+import pytest
+
+from repro.cloud import (SPOT, AutoscalerConfig, CloudProvider, CloudSimulator,
+                         NodeAutoscaler, NodePool)
+from repro.core.autoscale import PreemptingPolicy
+from repro.core.job import JobSpec
+from repro.core.perf_model import PiecewiseScalingModel, RescaleModel
+from repro.core.policies import PolicyConfig
+from repro.core.simulator import (SimWorkload, make_jacobi_jobs, run_variant)
+from repro.obs.audit import audit_file, audit_records, split_runs
+from repro.obs.trace import Tracer, install
+
+
+def wl(steps=100.0, t1=1.0, t_many=1.0, data=1e9):
+    return SimWorkload(
+        scaling=PiecewiseScalingModel(((1.0, t1), (64.0, t_many))),
+        total_work=steps, data_bytes=data, rescale=RescaleModel())
+
+
+def _traced_core_run():
+    specs = make_jacobi_jobs(seed=7, n_jobs=10, submission_gap=60.0)
+    with install(Tracer()) as tr:
+        run_variant("elastic_preempt", specs, total_slots=32)
+    return tr.records
+
+
+def _traced_cloud_run():
+    """table2-style autoscaled spot cell with injected kills."""
+    prov = CloudProvider([
+        NodePool("sp", slots_per_node=8, price_per_slot_hour=0.016,
+                 market=SPOT, boot_latency=60.0, teardown_delay=30.0,
+                 initial_nodes=2, max_nodes=4, spot_lifetime_mean=1e12),
+        NodePool("od", slots_per_node=8, price_per_slot_hour=0.048,
+                 boot_latency=90.0, teardown_delay=30.0, initial_nodes=1,
+                 max_nodes=4)])
+    asc = NodeAutoscaler(prov, AutoscalerConfig(
+        tick_interval=30.0, scale_up_cooldown=30.0, scale_down_cooldown=120.0,
+        idle_timeout=180.0, headroom_slots=8, spot_fraction=0.3))
+    pcfg = PolicyConfig(rescale_gap=0.0)
+    tr = Tracer()
+    sim = CloudSimulator(prov, pcfg, policy=PreemptingPolicy(pcfg),
+                         autoscaler=asc, tracer=tr)
+    for i in range(6):
+        sim.submit(JobSpec(f"j{i}", 1 + i % 3, 4, 8, 30.0 * i), wl(600))
+    victim = sorted(n for n, nd in prov.nodes.items()
+                    if nd.pool.market == SPOT)[0]
+    prov.inject_spot_kill(victim, 120.0, sim.queue)
+    sim.run()
+    return tr.records
+
+
+@pytest.fixture(scope="module")
+def core_records():
+    return _traced_core_run()
+
+
+@pytest.fixture(scope="module")
+def cloud_records():
+    return _traced_cloud_run()
+
+
+def _tamper(records, fn):
+    recs = copy.deepcopy(records)
+    fn(recs)
+    return recs
+
+
+# ---------------------------------------------------------------------------
+# real runs PASS
+# ---------------------------------------------------------------------------
+
+def test_core_run_passes_all_checks(core_records):
+    (rep,) = audit_records(core_records)
+    assert rep.ok, rep.summary()
+    assert rep.checks == {k: True for k in rep.checks}
+    assert rep.counts["submits"] == 10 == rep.counts["completes"]
+
+
+def test_cloud_run_passes_all_checks(cloud_records):
+    (rep,) = audit_records(cloud_records)
+    assert rep.ok, rep.summary()
+    assert rep.counts["preempts"] == rep.counts["resumes"]
+
+
+def test_cloud_run_produced_a_kill_blast(cloud_records):
+    kinds = [r["kind"] for r in cloud_records]
+    assert "spot_kill" in kinds and "kill_blast_end" in kinds
+    assert "node_up" in kinds and "run_end" in kinds
+
+
+def test_audit_file_round_trip(tmp_path, core_records):
+    path = str(tmp_path / "t.jsonl")
+    with Tracer(path) as tr:
+        for r in core_records:
+            tr.emit(**r)
+    (rep,) = audit_file(path)
+    assert rep.ok
+    assert rep.source == path
+
+
+def test_split_runs_separates_streams(core_records):
+    two = core_records + core_records
+    assert len(split_runs(two)) == 2
+
+
+# ---------------------------------------------------------------------------
+# tampered traces FAIL the right check
+# ---------------------------------------------------------------------------
+
+def _first(records, kind):
+    return next(r for r in records if r["kind"] == kind)
+
+
+def test_tampered_double_booked_slots_caught(core_records):
+    def boost(recs):
+        _first(recs, "job_start")["slots"] += 1000
+    reports = audit_records(_tamper(core_records, boost))
+    assert not reports[0].checks["slot_ownership"]
+
+
+def test_tampered_total_cost_caught(cloud_records):
+    def shave(recs):
+        _first(recs, "run_end")["total_cost"] *= 0.9
+    reports = audit_records(_tamper(cloud_records, shave))
+    assert not reports[0].checks["dollar_conservation"]
+
+
+def test_tampered_overhead_itemization_caught(cloud_records):
+    def drop(recs):
+        r = _first(recs, "cost_preempt_overhead")
+        r["dollars"] = 0.0
+    reports = audit_records(_tamper(cloud_records, drop))
+    assert not reports[0].checks["dollar_conservation"]
+
+
+def test_tampered_missing_resume_caught(core_records):
+    victim = _first(core_records, "job_preempt")["job"]
+    assert any(r["kind"] == "job_complete" and r["job"] == victim
+               for r in core_records)
+
+    def unresume(recs):
+        # vanish every resume of the preempted job: it now "completes
+        # while preempted" (or stays preempted past run_end)
+        recs[:] = [r for r in recs
+                   if not (r["kind"] == "job_start" and r.get("resume")
+                           and r["job"] == victim)]
+    reports = audit_records(_tamper(core_records, unresume))
+    assert not reports[0].checks["preempt_resume"]
+
+
+def test_tampered_unresolved_blast_victim_caught(cloud_records):
+    kill = _first(cloud_records, "spot_kill")
+    assert kill["residents"], "kill must have displaced residents"
+    victim = sorted(kill["residents"])[0]
+
+    def orphan(recs):
+        k = _first(recs, "spot_kill")
+        i = recs.index(k)
+        end = next(j for j in range(i + 1, len(recs))
+                   if recs[j]["kind"] == "kill_blast_end"
+                   and recs[j]["node"] == k["node"])
+        # delete the victim's resolution records inside the blast window
+        del recs[i + 1:end]
+    reports = audit_records(_tamper(cloud_records, orphan))
+    rep = reports[0]
+    assert not rep.ok
+    assert (not rep.checks["blast_integrity"]
+            or not rep.checks["slot_ownership"]), rep.summary()
+    assert any(victim in v for v in rep.violations) or rep.violations
+
+
+def test_tampered_lifecycle_mismatch_caught(core_records):
+    def vanish(recs):
+        r = _first(recs, "job_complete")
+        recs.remove(r)
+    reports = audit_records(_tamper(core_records, vanish))
+    assert not reports[0].ok
+
+
+def test_truncated_trace_caught(core_records):
+    reports = audit_records(core_records[:-1])   # drop run_end
+    assert not reports[0].checks["lifecycle"]
+
+
+def test_phantom_capacity_caught(cloud_records):
+    def strip_node(recs):
+        r = _first(recs, "node_up")
+        recs.remove(r)
+    reports = audit_records(_tamper(cloud_records, strip_node))
+    assert not reports[0].checks["slot_ownership"]
