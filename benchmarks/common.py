@@ -52,6 +52,23 @@ def metrics_kv(m, *keys, prefixes=(), **extra) -> str:
     return kv(**fields)
 
 
+def phases_kv(cells) -> str:
+    """Derived-field string of mean per-phase seconds (the priority-weighted
+    makespan decomposition from ``repro.obs.critical_path``) over one or more
+    :class:`ScheduleMetrics` — the ``.phases`` row every table emits next to
+    its headline numbers.  Empty string when no cell carries phases."""
+    ms = cells if isinstance(cells, (list, tuple)) else [cells]
+    ms = [m for m in ms if getattr(m, "phase_seconds", None)]
+    if not ms:
+        return ""
+    acc = {}
+    for m in ms:
+        for k, v in m.phase_seconds.items():
+            acc[k] = acc.get(k, 0.0) + v
+    n = len(ms)
+    return kv(**{k: v / n for k, v in acc.items()})
+
+
 def time_call(fn, *args, repeat: int = 3, **kw):
     """Median wall time in microseconds."""
     ts = []

@@ -6,13 +6,21 @@
     analog of the paper's Jacobi runs, including the paper's headline
     findings (restart dominates small problems; in-memory ckpt/restore cheap).
 (b) The calibrated analytic model the simulator uses (paper shapes 5a/5b/5c).
+(c) Per-phase makespan decomposition of traced simulator runs — where the
+    overhead of (a)/(b) actually lands in end-to-end completion time — with
+    a reconciliation PASS/FAIL row: the phase sums must match the
+    priority-weighted mean completion to <0.1% (same invariant the trace
+    auditor enforces).
+
+``run(sim_only=True)`` (the harness ``--fast`` path / CI) skips the live
+subprocess section (a) and keeps (b) and (c).
 """
 import json
 import os
 import subprocess
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import emit, kv, phases_kv
 
 HELPER = r"""
 import json, sys
@@ -35,7 +43,7 @@ print("JSON" + json.dumps(out))
 """
 
 
-def run():
+def _live_rows():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.abspath("src") + os.pathsep + \
@@ -56,6 +64,39 @@ def run():
     if not rows:
         emit("fig5.live.FAILED", 0.0, proc.stderr[-200:].replace(",", ";"))
 
+
+def _sim_phase_rows():
+    """(c): decompose traced end-to-end runs into the obs phase partition
+    and assert the decomposition reconciles with the makespan metric."""
+    from repro.core.simulator import make_jacobi_jobs, run_variant
+    from repro.obs.critical_path import reconcile
+    from repro.obs.trace import Tracer, current_tracer, install
+
+    outer = current_tracer()             # harness --trace file, if any
+    for variant in ("elastic", "elastic_preempt"):
+        specs = make_jacobi_jobs(seed=7, n_jobs=16, submission_gap=90.0)
+        with Tracer() as tr, install(tr):
+            m = run_variant(variant, specs, total_slots=64,
+                            rescale_gap=180.0)
+        if outer.enabled:                # tee so fig5.jsonl stays auditable
+            for r in tr.records:
+                outer.emit(r["kind"], r["t"],
+                           **{k: v for k, v in r.items()
+                              if k not in ("kind", "t")})
+        emit(f"fig5.sim.{variant}.phases", 0.0, phases_kv(m))
+        violations = reconcile(tr.records, rel_tol=1e-3)
+        total = sum(m.phase_seconds.values())
+        drift = abs(total - m.weighted_mean_completion)
+        emit(f"fig5.sim.{variant}.phase_reconcile", 0.0, kv(
+            "PASS" if not violations else "FAIL",
+            phase_total=total, wmct=m.weighted_mean_completion,
+            drift_s=drift, violations=len(violations)))
+
+
+def run(sim_only: bool = False):
+    if not sim_only:
+        _live_rows()
+
     # analytic model (paper Fig. 5a/5b/5c shapes)
     from repro.core.perf_model import RescaleModel
     rm = RescaleModel()
@@ -71,3 +112,5 @@ def run():
         st = rm.stages(32, 16, 2 * 4.0 * n ** 2)
         emit(f"fig5.model.shrink32to16.n{n}", sum(st.values()) * 1e6,
              ";".join(f"{k}={v:.3f}" for k, v in st.items()))
+
+    _sim_phase_rows()

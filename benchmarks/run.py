@@ -9,6 +9,11 @@ table/figure writes ``DIR/<name>.jsonl`` (structured span/event records —
 the input of ``python -m repro.obs.audit``) plus ``DIR/<name>.timeline.txt``
 (the text Gantt of the file's last run).  Tracing rides the module-global
 ``obs.trace.install`` hook, so the modules themselves stay trace-agnostic.
+
+``--profile`` installs a fresh :class:`repro.obs.profile.SimProfiler` around
+each module the same way and prints per-module ``<name>.profile.*`` rows
+(per-event-kind handler cost, heap/metrics section cost) after the module's
+own rows — where each table's wall-clock actually goes.
 """
 import argparse
 import os
@@ -45,14 +50,29 @@ def _run_traced(name, fn, trace_dir: str) -> None:
             fh.write(render_last_run(records) + "\n")
 
 
+def _emit_profile(name, prof) -> None:
+    from benchmarks.common import emit, kv
+    report = prof.report()
+    for kind, row in report["events"].items():
+        emit(f"{name}.profile.event.{kind}", row["mean_us"],
+             kv(count=row["count"], total_s=row["total_s"]))
+    for sec, row in report["sections"].items():
+        emit(f"{name}.profile.section.{sec}", row["mean_us"],
+             kv(count=row["count"], total_s=row["total_s"]))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true",
-                    help="fewer seeds for the simulation sweeps")
+                    help="fewer seeds for the simulation sweeps; fig5 skips "
+                         "its live-subprocess section (sim+model only)")
     ap.add_argument("--trace", action="store_true",
                     help="record per-module trace JSONL + timeline artifacts")
     ap.add_argument("--trace-dir", default="trace-artifacts")
+    ap.add_argument("--profile", action="store_true",
+                    help="self-profile each module's simulator event loop "
+                         "and print <name>.profile.* rows")
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
@@ -65,12 +85,24 @@ def main() -> None:
             mod = importlib.import_module(module)
             if args.fast and name in ("fig7", "fig8"):
                 fn = lambda: mod.run(seeds=range(3))  # noqa: E731
+            elif args.fast and name == "fig5":
+                fn = lambda: mod.run(sim_only=True)  # noqa: E731
             else:
                 fn = mod.run
+            if args.profile:
+                from repro.obs.profile import SimProfiler, install_profiler
+                prof = SimProfiler()
+                inner = fn
+
+                def fn(inner=inner, prof=prof):
+                    with install_profiler(prof):
+                        inner()
             if args.trace:
                 _run_traced(name, fn, args.trace_dir)
             else:
                 fn()
+            if args.profile:
+                _emit_profile(name, prof)
         except Exception as e:
             print(f"{name}.ERROR,0.0,{e!r}"[:400].replace("\n", " "))
             traceback.print_exc(file=sys.stderr)

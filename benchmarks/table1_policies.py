@@ -77,11 +77,12 @@ def run():
         m = run_variant(v, specs, total_slots=64, rescale_gap=180.0)
         us = (time.perf_counter() - t0) * 1e6
         # machine-readable row off ScheduleMetrics.to_dict(); the resp_p99
-        # prefix pulls the aggregate AND per-priority-class p99 response
+        # prefix pulls the aggregate AND per-priority-class p99 response,
+        # the phase_seconds prefix the per-phase makespan decomposition
         emit(f"table1.sim.{v}", us, metrics_kv(
             m, "total_time", "utilization", "weighted_mean_response",
             "weighted_mean_completion", "rescale_count",
-            prefixes=("percentiles.resp_p99",)))
+            prefixes=("percentiles.resp_p99", "phase_seconds.")))
 
     # --- "actual" columns: live controller with real training jobs ----------
     env = dict(os.environ)

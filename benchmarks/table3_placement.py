@@ -18,7 +18,7 @@ spread must win blast radius.
 """
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, phases_kv
 from repro.cloud import (SPOT, AutoscalerConfig, CloudProvider, CloudSimulator,
                          NodeAutoscaler, NodePool)
 from repro.core.autoscale import PreemptingPolicy
@@ -89,6 +89,7 @@ def run():
              f"blast_jobs={a['blast_jobs']:.2f};preempts={a['preempts']:.2f};"
              f"compl={a['compl']:.1f};kills={a['kills']:.1f};"
              f"dropped={a['dropped']}")
+        emit(f"table3.{placement}.phases", 0.0, phases_kv(cells))
 
     pack, spread = agg["pack"], agg["spread"]
     ok = (pack["idle"] < spread["idle"]

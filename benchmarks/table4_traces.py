@@ -35,7 +35,7 @@ if __package__ in (None, ""):       # `python benchmarks/table4_traces.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
 
-from benchmarks.common import emit, kv
+from benchmarks.common import emit, kv, phases_kv
 from repro.cloud import (AutoscalerConfig, CloudProvider, NodeAutoscaler,
                          NodePool)
 from repro.workloads import (ReplayConfig, characterize, fixture_path,
@@ -102,6 +102,7 @@ def run():
                 wmct=m.weighted_mean_completion, util=m.utilization,
                 dropped=m.dropped_jobs, rescales=m.rescale_count,
                 cv=stats.interarrival_cv, burst=stats.burstiness))
+            emit(f"table4.{wname}.{policy}.phases", 0.0, phases_kv(m))
 
     # verdict: elastic beats static on EVERY workload shape — better WMCT at
     # equal capacity, fewer dollars under autoscaled provisioning

@@ -37,7 +37,7 @@ if __package__ in (None, ""):       # `python benchmarks/table5_zones.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
 
-from benchmarks.common import emit, kv
+from benchmarks.common import emit, kv, phases_kv
 from repro.cloud import (SPOT, AutoscalerConfig, CloudProvider, NodeAutoscaler,
                          NodePool)
 from repro.workloads import ReplayConfig, generate, replay_cloud
@@ -153,6 +153,8 @@ def run():
                 cost=a["cost"], idle=a["idle"], xfer=a["xfer"],
                 zone_reclaims=a["reclaims"], kills=a["kills"],
                 dropped=a["dropped"]))
+            emit(f"table5.{severity}.{placement}.phases", 0.0,
+                 phases_kv(cells))
 
     # verdict: under EVERY correlated severity, zone_spread shrinks the blast
     # radius and the WMCT vs zone-oblivious pack; the dollar delta is

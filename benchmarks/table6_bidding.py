@@ -43,7 +43,7 @@ if __package__ in (None, ""):       # `python benchmarks/table6_bidding.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
 
-from benchmarks.common import emit, kv
+from benchmarks.common import emit, kv, phases_kv
 from repro.cloud import (SPOT, AutoscalerConfig, BidderConfig, CloudProvider,
                          DemandAwareBidder, NodeAutoscaler, NodePool)
 from repro.workloads import ReplayConfig, generate, replay_cloud
@@ -172,6 +172,7 @@ def run():
                 ovh=a["ovh"], xfer=a["xfer"], kills=a["kills"],
                 zone_reclaims=a["reclaims"], bids=a["bids"],
                 hot_share=a["hot_share"], dropped=a["dropped"]))
+            emit(f"table6.{regime}.{policy}.phases", 0.0, phases_kv(cells))
 
     # verdict per the ISSUE-5 acceptance bar: matches static's dollars when
     # no zone is worth abandoning; strictly beats it on preemption-overhead

@@ -133,10 +133,12 @@ class _CloudActions(_SimActions):
 class CloudSimulator(Simulator):
     def __init__(self, provider: CloudProvider, policy_cfg: PolicyConfig,
                  *, autoscaler: Optional[NodeAutoscaler] = None,
-                 policy=None, placement: str = "pack", tracer=None):
+                 policy=None, placement: str = "pack", tracer=None,
+                 profiler=None):
         # all capacity comes from nodes; `placement` picks the slot->node
         # strategy (pack: low fragmentation; spread: small kill blast radius)
-        super().__init__(0, policy_cfg, placement=placement, tracer=tracer)
+        super().__init__(0, policy_cfg, placement=placement, tracer=tracer,
+                         profiler=profiler)
         if policy is not None:
             self.policy = policy
         self.provider = provider
@@ -174,11 +176,15 @@ class CloudSimulator(Simulator):
 
     # -- bookkeeping hooks ---------------------------------------------------
     def _trace_node_up(self, node) -> None:
+        # boot window feeds the phase decomposition: initial queue wait that
+        # overlaps a node's request->up interval is boot_wait, not queue_wait
+        self.phases.note_boot_window(node.requested_at, self.now)
         if self.tracer.enabled:
             self.tracer.emit("node_up", t=self.now, node=node.node_id,
                              slots=node.slots, zone=node.pool.zone,
                              region=node.pool.region, market=node.pool.market,
-                             price_per_slot_hour=node.pool.price_per_slot_hour)
+                             price_per_slot_hour=node.pool.price_per_slot_hour,
+                             boot_s=self.now - node.requested_at)
 
     def _wire_decisions(self) -> None:
         super()._wire_decisions()
@@ -366,6 +372,7 @@ class CloudSimulator(Simulator):
             self.total_overhead += overhead
             self.migrations += 1
             self.counters.inc("migrations")
+            self.phases.on_migrate(job.job_id, self.now, overhead)
             if self.tracer.enabled:
                 self.tracer.emit("job_migrate", t=self.now, job=job.job_id,
                                  from_node=node_id, moved=moved,

@@ -5,6 +5,7 @@ import heapq
 import math
 import itertools
 from dataclasses import dataclass, field
+from time import perf_counter
 from typing import Any, Optional
 
 
@@ -38,11 +39,20 @@ class EventQueue:
     def __init__(self):
         self._heap = []
         self._count = itertools.count()
+        # optional repro.obs.profile.SimProfiler: the owning simulator wires
+        # its profiler in so heap pushes show up as a "heap_push" section
+        self.profiler = None
 
     def push(self, time: float, kind: str, payload: Any = None,
              tiebreak: tuple = _LAST) -> Event:
         ev = Event(time, tiebreak, next(self._count), kind, payload)
-        heapq.heappush(self._heap, ev)
+        prof = self.profiler
+        if prof is None:
+            heapq.heappush(self._heap, ev)
+        else:
+            t0 = perf_counter()
+            heapq.heappush(self._heap, ev)
+            prof.section("heap_push", perf_counter() - t0)
         return ev
 
     def pop(self) -> Optional[Event]:

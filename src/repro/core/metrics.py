@@ -130,6 +130,15 @@ class ScheduleMetrics:
     percentiles: Dict[str, float] = field(default_factory=dict)
     # monotonic run counters (events processed, rescales, migrations, ...)
     counters: Dict[str, int] = field(default_factory=dict)
+    # makespan decomposition (repro.obs.critical_path): priority-weighted
+    # mean seconds per phase over completed jobs — the phases PARTITION each
+    # makespan, so the values sum to weighted_mean_completion
+    phase_seconds: Dict[str, float] = field(default_factory=dict)
+    # plain mean seconds per phase within one priority class, flattened as
+    # ``prio<k>.<phase>``
+    phase_by_priority: Dict[str, float] = field(default_factory=dict)
+    # jobs whose single largest phase is <phase> (fleet histogram)
+    dominant_phase: Dict[str, int] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         """Machine-readable form (plain scalars + dicts, JSON-safe) — the
@@ -158,13 +167,15 @@ class ScheduleMetrics:
 
 
 def compute_metrics(jobs: Sequence[JobState], util: UtilizationLog, *,
-                    latency=None, counters: Optional[Dict[str, int]] = None
-                    ) -> ScheduleMetrics:
+                    latency=None, counters: Optional[Dict[str, int]] = None,
+                    phases=None) -> ScheduleMetrics:
     """Cost fields stay at their zero defaults here; CloudSimulator's
     ``_final_metrics`` fills them from its CostReport via
     dataclasses.replace.  ``latency`` is a
     :class:`repro.obs.stats.LatencyRecorder` (or anything with
-    ``percentile_fields()``); ``counters`` a plain dict."""
+    ``percentile_fields()``); ``counters`` a plain dict; ``phases`` a
+    :class:`repro.obs.critical_path.PhaseLedger` whose per-job makespan
+    decompositions are rolled up into the ``phase_*`` fields."""
     done = [j for j in jobs if j.end_time is not None]
     submits = [j.spec.submit_time for j in jobs]
     t0 = min(submits) if submits else 0.0
@@ -172,6 +183,15 @@ def compute_metrics(jobs: Sequence[JobState], util: UtilizationLog, *,
     wsum = sum(j.spec.priority for j in done) or 1.0
     resp = sum(j.spec.priority * (response_time(j) or 0.0) for j in done) / wsum
     comp = sum(j.spec.priority * (completion_time(j) or 0.0) for j in done) / wsum
+    phase_kw = {}
+    if phases is not None:
+        from repro.obs.critical_path import rollup
+        fleet = rollup(phases.per_job(),
+                       {j.spec.job_id: j.spec.priority for j in jobs})
+        if fleet.jobs:
+            phase_kw = dict(phase_seconds=fleet.phase_seconds,
+                            phase_by_priority=fleet.phase_by_priority,
+                            dominant_phase=fleet.dominant_phase)
     return ScheduleMetrics(
         total_time=t1 - t0,
         utilization=util.average(t0, t1),
@@ -183,4 +203,5 @@ def compute_metrics(jobs: Sequence[JobState], util: UtilizationLog, *,
         percentiles=(latency.percentile_fields()
                      if latency is not None else {}),
         counters=dict(counters) if counters else {},
+        **phase_kw,
     )

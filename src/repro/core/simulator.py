@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from time import perf_counter
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -24,7 +25,9 @@ from repro.core.metrics import ScheduleMetrics, UtilizationLog, compute_metrics
 from repro.core.perf_model import (JACOBI_SIZES, JacobiModel,
                                    PiecewiseScalingModel, RescaleModel)
 from repro.core.policies import ElasticPolicy, PolicyConfig
+from repro.obs.critical_path import PhaseLedger
 from repro.obs.decisions import DecisionLog
+from repro.obs.profile import current_profiler
 from repro.obs.stats import Counters, LatencyRecorder
 from repro.obs.trace import current_tracer
 
@@ -76,6 +79,7 @@ class _SimActions:
         sim._schedule_completion(job)
         sim._record_util()
         sim.latency.mark_started(job.job_id, sim.now)
+        sim.phases.on_start(job.job_id, sim.now, restore_s=sim.last_resume_s)
         if sim.tracer.enabled:
             sim.tracer.emit("job_start", t=sim.now, job=job.job_id,
                             slots=replicas, priority=job.spec.priority,
@@ -118,6 +122,7 @@ class _SimActions:
         sim._schedule_completion(job)
         sim._record_util()
         sim.counters.inc("rescales")
+        sim.phases.on_rescale(job.job_id, sim.now, overhead)
         if sim.tracer.enabled:
             sim.tracer.emit("job_rescale", t=sim.now, job=job.job_id,
                             **{"from": from_replicas, "to": replicas},
@@ -144,6 +149,7 @@ class _SimActions:
         sim.now += sim.last_preempt_ckpt_s
         sim.counters.inc("preemptions")
         sim.latency.mark_queued(job.job_id, sim.now)
+        sim.phases.on_preempt(job.job_id, sim.now, sim.last_preempt_ckpt_s)
         if sim.tracer.enabled:
             sim.tracer.emit("job_preempt", t=sim.now, job=job.job_id,
                             slots=job.replicas,
@@ -164,7 +170,8 @@ class _SimActions:
 class Simulator:
     def __init__(self, total_slots: int, policy_cfg: PolicyConfig, *,
                  placement: str = "pack",
-                 slots_per_node: Optional[int] = None, tracer=None):
+                 slots_per_node: Optional[int] = None, tracer=None,
+                 profiler=None):
         self.cluster = Cluster(total_slots, slots_per_node=slots_per_node,
                                placement=placement)
         self.policy = ElasticPolicy(policy_cfg)
@@ -180,8 +187,14 @@ class Simulator:
         # observability (repro.obs): explicit tracer wins, else whatever
         # `obs.trace.install` put up, else the no-op null tracer
         self.tracer = tracer if tracer is not None else current_tracer()
+        # self-profiler (repro.obs.profile): same precedence; None = off
+        self.profiler = profiler if profiler is not None \
+            else current_profiler()
+        self.queue.profiler = self.profiler
         self.counters = Counters()
         self.latency = LatencyRecorder()
+        # always-on makespan decomposition (repro.obs.critical_path)
+        self.phases = PhaseLedger()
         self.run_id = self.tracer.next_run_id()
         if self.tracer.enabled:
             # emitted from __init__ so subclass capacity bootstrap (cloud
@@ -191,10 +204,14 @@ class Simulator:
 
     # -- bookkeeping ---------------------------------------------------------
     def _record_util(self):
+        prof = self.profiler
+        t0 = perf_counter() if prof is not None else 0.0
         self.util.record(self.now, self.cluster.used_slots)
         if self.cluster.node_count > 1:     # single-node: frag is undefined
             self.util.record_fragmentation(self.now,
                                            self.cluster.fragmentation())
+        if prof is not None:
+            prof.section("metrics_tick", perf_counter() - t0)
 
     def _rate(self, job: JobState) -> float:
         wl = self.workloads[job.job_id]
@@ -230,54 +247,24 @@ class Simulator:
         if self.tracer.enabled:
             self._wire_decisions()
         counters = self.counters
+        prof = self.profiler
         while len(self.queue):
             if self._should_stop():
                 break
-            ev = self.queue.pop()
-            self.now = max(self.now, ev.time)
-            counters.inc("events")
-            if ev.kind == "submit":
-                job: JobState = ev.payload
-                self.cluster.add_job(job)
-                if self.tracer.enabled:
-                    self.tracer.emit("job_submit", t=self.now,
-                                     job=job.job_id,
-                                     priority=job.spec.priority,
-                                     min=job.spec.min_replicas,
-                                     max=job.spec.max_replicas)
-                # policies may consult work_remaining (cost-benefit): sync all
-                for j in self.cluster.running_jobs():
-                    self._sync_progress(j)
-                self.policy.on_new_job(self.cluster, job, self.now,
-                                       self.actions)
-            elif ev.kind == "complete":
-                job_id, version = ev.payload
-                job = self.cluster.jobs[job_id]
-                if job.version != version or job.status != JobStatus.RUNNING:
-                    continue       # stale event (job was rescaled since)
-                self._sync_progress(job)
-                if job.work_remaining > 1e-6:   # overhead pushed completion
-                    self._schedule_completion(job)
-                    continue
-                freed = job.replicas
-                self.cluster.evict(job.job_id)
-                job.status = JobStatus.COMPLETED
-                job.end_time = self.now
-                job.replicas = 0
-                self._record_util()
-                counters.inc("completions")
-                self.latency.observe_completed(job)
-                if self.tracer.enabled:
-                    self.tracer.emit("job_complete", t=self.now,
-                                     job=job.job_id, slots=freed)
-                for j in self.cluster.running_jobs():
-                    self._sync_progress(j)
-                self.policy.on_job_complete(self.cluster, freed, self.now,
-                                            self.actions)
+            if prof is None:
+                ev = self.queue.pop()
+                self.now = max(self.now, ev.time)
+                counters.inc("events")
+                self._dispatch(ev)
             else:
-                # extension point: repro.cloud adds node_up / node_down /
-                # spot_kill / autoscale_tick event kinds
-                self._handle_event(ev)
+                t0 = perf_counter()
+                ev = self.queue.pop()
+                t1 = perf_counter()
+                prof.section("heap_pop", t1 - t0)
+                self.now = max(self.now, ev.time)
+                counters.inc("events")
+                self._dispatch(ev)
+                prof.event(ev.kind, perf_counter() - t1)
         metrics = self._final_metrics()
         if self.tracer.enabled:
             self.tracer.emit(
@@ -290,12 +277,63 @@ class Simulator:
             self.tracer.flush()
         return metrics
 
+    def _dispatch(self, ev) -> None:
+        """Process one popped event (clock already advanced, counter
+        ticked).  Split out of :meth:`run` so the profiler can time every
+        event by kind with two ``perf_counter`` calls around one method."""
+        if ev.kind == "submit":
+            job: JobState = ev.payload
+            self.cluster.add_job(job)
+            self.phases.on_submit(job.job_id, self.now,
+                                  priority=job.spec.priority)
+            if self.tracer.enabled:
+                self.tracer.emit("job_submit", t=self.now,
+                                 job=job.job_id,
+                                 priority=job.spec.priority,
+                                 min=job.spec.min_replicas,
+                                 max=job.spec.max_replicas)
+            # policies may consult work_remaining (cost-benefit): sync all
+            for j in self.cluster.running_jobs():
+                self._sync_progress(j)
+            self.policy.on_new_job(self.cluster, job, self.now,
+                                   self.actions)
+        elif ev.kind == "complete":
+            job_id, version = ev.payload
+            job = self.cluster.jobs[job_id]
+            if job.version != version or job.status != JobStatus.RUNNING:
+                return         # stale event (job was rescaled since)
+            self._sync_progress(job)
+            if job.work_remaining > 1e-6:   # overhead pushed completion
+                self._schedule_completion(job)
+                return
+            freed = job.replicas
+            self.cluster.evict(job.job_id)
+            job.status = JobStatus.COMPLETED
+            job.end_time = self.now
+            job.replicas = 0
+            self._record_util()
+            self.counters.inc("completions")
+            self.latency.observe_completed(job)
+            self.phases.on_complete(job.job_id, self.now)
+            if self.tracer.enabled:
+                self.tracer.emit("job_complete", t=self.now,
+                                 job=job.job_id, slots=freed)
+            for j in self.cluster.running_jobs():
+                self._sync_progress(j)
+            self.policy.on_job_complete(self.cluster, freed, self.now,
+                                        self.actions)
+        else:
+            # extension point: repro.cloud adds node_up / node_down /
+            # spot_kill / autoscale_tick event kinds
+            self._handle_event(ev)
+
     def _final_metrics(self) -> ScheduleMetrics:
         """Extension hook: CloudSimulator closes its cost ledger here so the
         base run loop can emit one ``run_end`` record with final dollars."""
         return compute_metrics(list(self.cluster.jobs.values()), self.util,
                                latency=self.latency,
-                               counters=self.counters.as_dict())
+                               counters=self.counters.as_dict(),
+                               phases=self.phases)
 
     def _wire_decisions(self) -> None:
         """Bind a DecisionLog to every decision-carrying component (policies

@@ -25,6 +25,10 @@ violated physics.  Invariants (per run, a ``run_start`` .. ``run_end`` span):
   resolved (migrated / shrunk / preempted / failed) before the matching
   ``kill_blast_end``.
 - **lifecycle** — submit/complete/drop counts reconcile with ``run_end``.
+- **phase_reconciliation** — the :mod:`repro.obs.critical_path`
+  decomposition of every completed job sums to its observed makespan
+  (complete.t - submit.t) to <0.1%: the phase attribution is a PARTITION of
+  response time, not an estimate.
 
 CLI::
 
@@ -155,7 +159,8 @@ class _RunAuditor:
     def run(self) -> AuditReport:
         rep = self.rep
         for check in ("slot_ownership", "dollar_conservation",
-                      "preempt_resume", "blast_integrity", "lifecycle"):
+                      "preempt_resume", "blast_integrity", "lifecycle",
+                      "phase_reconciliation"):
             rep.checks.setdefault(check, True)
         rep.counts["records"] = len(self.records)
         saw_end = False
@@ -261,6 +266,11 @@ class _RunAuditor:
                 self._finish(r, t)
         if not saw_end:
             self.fail("lifecycle", "no run_end record (truncated trace)")
+        # phase decomposition must partition every completed job's makespan
+        # (audit imports critical_path; critical_path never imports audit)
+        from repro.obs.critical_path import reconcile
+        for msg in reconcile(self.records, rel_tol=1e-3):
+            self.fail("phase_reconciliation", msg)
         rep.counts.update(
             submits=len(self.submitted), completes=len(self.completed),
             preempts=self.preempts, resumes=self.resumes)

@@ -59,16 +59,27 @@ NULL_TRACER = NullTracer()
 class Tracer:
     """JSONL sink.  With ``path`` records stream to disk; without one (or
     with ``keep=True``) they accumulate in ``records`` for in-process
-    consumers (tests, the audit/timeline helpers)."""
+    consumers (tests, the audit/timeline helpers).
+
+    Emission is LAZY: the hot path appends one ``(kind, t, fields)`` tuple
+    to a pending buffer; dict assembly, JSON serialization, and the file
+    write happen per ``batch`` records (and at ``flush``/``close``/
+    ``records`` access), amortizing the serialization cost out of the
+    simulator's event loop.  Callers must therefore pass fields the caller
+    will not mutate afterwards — every instrumentation site in the repo
+    already passes fresh scalars/copies (``dict(victims)``, ``list(...)``).
+    """
 
     enabled = True
 
     def __init__(self, path: Optional[str] = None, *,
-                 keep: Optional[bool] = None):
+                 keep: Optional[bool] = None, batch: int = 1024):
         self.path = path
         self._fh = open(path, "w") if path else None
         keep = keep if keep is not None else path is None
-        self.records: Optional[List[Dict[str, Any]]] = [] if keep else None
+        self._records: Optional[List[Dict[str, Any]]] = [] if keep else None
+        self._pending: List[tuple] = []
+        self._batch = batch
         self._runs = 0
 
     def next_run_id(self) -> int:
@@ -78,18 +89,41 @@ class Tracer:
         return self._runs
 
     def emit(self, kind: str, t: float = 0.0, **fields) -> None:
-        rec: Dict[str, Any] = {"kind": kind, "t": t}
-        rec.update(fields)
+        self._pending.append((kind, t, fields))
+        if len(self._pending) >= self._batch:
+            self._drain()
+
+    def _drain(self) -> None:
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        recs: List[Dict[str, Any]] = []
+        for kind, t, fields in pending:
+            rec = {"kind": kind, "t": t}
+            rec.update(fields)
+            recs.append(rec)
         if self._fh is not None:
-            self._fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
-        if self.records is not None:
-            self.records.append(rec)
+            dumps = json.dumps
+            self._fh.write("".join(dumps(r, separators=(",", ":")) + "\n"
+                                   for r in recs))
+        if self._records is not None:
+            self._records.extend(recs)
+
+    @property
+    def records(self) -> Optional[List[Dict[str, Any]]]:
+        """Accumulated records (None when streaming to disk without
+        ``keep``).  Accessing drains the pending buffer first, so in-process
+        consumers always see a complete, ordered list."""
+        self._drain()
+        return self._records
 
     def flush(self) -> None:
+        self._drain()
         if self._fh is not None:
             self._fh.flush()
 
     def close(self) -> None:
+        self._drain()
         if self._fh is not None:
             self._fh.close()
             self._fh = None

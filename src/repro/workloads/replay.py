@@ -107,13 +107,14 @@ def _prepare(variant: str, specs: List[JobSpec], cfg: ReplayConfig):
 
 
 def replay_variant(trace: Trace, variant: str, cfg: ReplayConfig,
-                   *, tracer=None) -> ScheduleMetrics:
+                   *, tracer=None, profiler=None) -> ScheduleMetrics:
     """Replay through the fixed-capacity :class:`Simulator` (the paper's
     §4.3 frame) at ``cfg.cluster_slots`` slots."""
     pairs = compile_trace(trace, cfg)
     wls: Dict[str, SimWorkload] = {s.job_id: w for s, w in pairs}
     specs, pcfg, policy = _prepare(variant, [s for s, _ in pairs], cfg)
-    sim = Simulator(cfg.cluster_slots, pcfg, tracer=tracer)
+    sim = Simulator(cfg.cluster_slots, pcfg, tracer=tracer,
+                    profiler=profiler)
     if policy is not None:
         sim.policy = policy
     for s in specs:
@@ -126,7 +127,7 @@ def replay_cloud(trace: Trace, cfg: ReplayConfig, provider: CloudProvider,
                  autoscaler: Optional[NodeAutoscaler] = None,
                  placement: str = "pack",
                  pre_run: Optional[Callable[[CloudSimulator], None]] = None,
-                 tracer=None) -> CloudSimulator:
+                 tracer=None, profiler=None) -> CloudSimulator:
     """Replay through :class:`CloudSimulator` (dynamic capacity, spot kills,
     dollars).  Returns the finished simulator — ``.run()`` has been called —
     so callers can read both the metrics and the cost report / kill blasts.
@@ -139,7 +140,8 @@ def replay_cloud(trace: Trace, cfg: ReplayConfig, provider: CloudProvider,
     wls: Dict[str, SimWorkload] = {s.job_id: w for s, w in pairs}
     specs, pcfg, policy = _prepare(variant, [s for s, _ in pairs], cfg)
     sim = CloudSimulator(provider, pcfg, autoscaler=autoscaler,
-                         policy=policy, placement=placement, tracer=tracer)
+                         policy=policy, placement=placement, tracer=tracer,
+                         profiler=profiler)
     for s in specs:
         sim.submit(s, wls[s.job_id])
     if pre_run is not None:

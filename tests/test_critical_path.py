@@ -1,0 +1,160 @@
+"""Critical-path decomposition (repro.obs.critical_path): the phases
+partition every completed job's makespan exactly (live ledger and offline
+trace replay agree), preemption/boot phases land where they should, the
+fleet rollup is priority-weighted like WMCT, and reconcile() catches a
+stream whose decomposition cannot cover the makespan.
+"""
+import pytest
+
+from repro.cloud import (AutoscalerConfig, CloudProvider, CloudSimulator,
+                         NodeAutoscaler, NodePool)
+from repro.core.autoscale import PreemptingPolicy
+from repro.core.job import JobSpec
+from repro.core.perf_model import PiecewiseScalingModel, RescaleModel
+from repro.core.policies import PolicyConfig
+from repro.core.simulator import (SimWorkload, Simulator, make_jacobi_jobs,
+                                  run_variant)
+from repro.obs import Tracer, install
+from repro.obs.critical_path import (PHASES, analyze, decompose,
+                                     merge_intervals, overlap, reconcile,
+                                     rollup)
+
+
+def wl(steps=100.0):
+    return SimWorkload(
+        scaling=PiecewiseScalingModel(((1.0, 1.0), (64.0, 1.0))),
+        total_work=steps, data_bytes=1e9, rescale=RescaleModel())
+
+
+# ---------------------------------------------------------------------------
+# interval helpers
+# ---------------------------------------------------------------------------
+
+def test_merge_and_overlap():
+    ivs = merge_intervals([(5.0, 7.0), (0.0, 2.0), (1.0, 3.0), (4.0, 4.0)])
+    assert ivs == [(0.0, 3.0), (5.0, 7.0)]
+    assert overlap((2.0, 6.0), ivs) == pytest.approx(2.0)   # [2,3] + [5,6]
+    assert overlap((10.0, 12.0), ivs) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the partition invariant, live and offline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["elastic", "elastic_preempt"])
+def test_phase_sums_partition_the_weighted_mean_completion(variant):
+    specs = make_jacobi_jobs(seed=7, n_jobs=12, submission_gap=60.0)
+    with install(Tracer()) as tr:
+        m = run_variant(variant, specs, total_slots=48, rescale_gap=180.0)
+    assert set(m.phase_seconds) == set(PHASES)
+    assert sum(m.phase_seconds.values()) == \
+        pytest.approx(m.weighted_mean_completion, rel=1e-9)
+    assert reconcile(tr.records) == []
+    assert m.phase_seconds["compute"] > 0.0
+    assert m.phase_seconds["queue_wait"] > 0.0
+
+
+def test_offline_decompose_matches_live_ledger():
+    specs = make_jacobi_jobs(seed=11, n_jobs=8, submission_gap=45.0)
+    with install(Tracer()) as tr:
+        m = run_variant("elastic_preempt", specs, total_slots=32,
+                        rescale_gap=120.0)
+    prio = {r["job"]: r["priority"] for r in tr.records
+            if r["kind"] == "job_submit"}
+    fleet = rollup(decompose(tr.records), prio)
+    assert fleet.jobs == 8
+    for p in PHASES:
+        assert fleet.phase_seconds[p] == \
+            pytest.approx(m.phase_seconds[p], abs=1e-6), p
+    assert fleet.phase_by_priority == m.phase_by_priority
+    assert fleet.dominant_phase == m.dominant_phase
+
+
+def test_preemption_phases_attributed():
+    pcfg = PolicyConfig(rescale_gap=0.0)
+    tr = Tracer()
+    with install(tr):
+        sim = Simulator(8, pcfg)
+        sim.policy = PreemptingPolicy(pcfg)
+        sim.submit(JobSpec("lo", 1, 8, 8, 0.0), wl(100))
+        sim.submit(JobSpec("hi", 5, 8, 8, 1.0), wl(50))
+        sim.run()
+    lo = sim.phases.phases_of("lo")
+    assert lo is not None
+    assert lo["ckpt"] > 0.0              # paid the checkpoint
+    assert lo["outage"] > 0.0            # sat out hi's run
+    assert lo["restore"] > 0.0           # paid the restore on resume
+    lo_end = next(r["t"] for r in tr.records
+                  if r["kind"] == "job_complete" and r["job"] == "lo")
+    assert sum(lo.values()) == pytest.approx(lo_end - 0.0, rel=1e-9)
+    assert reconcile(tr.records) == []
+    hi = sim.phases.phases_of("hi")
+    assert hi["outage"] == 0.0 and hi["ckpt"] == 0.0
+
+
+def test_boot_wait_attributed_on_cloud_scale_up():
+    pool = NodePool("od", slots_per_node=8, price_per_slot_hour=0.048,
+                    boot_latency=120.0, teardown_delay=30.0,
+                    initial_nodes=1, max_nodes=4, zone="z1")
+    prov = CloudProvider([pool], seed=5)
+    asc = NodeAutoscaler(prov, AutoscalerConfig(
+        tick_interval=15.0, scale_up_cooldown=15.0,
+        scale_down_cooldown=120.0, idle_timeout=600.0))
+    sim = CloudSimulator(prov, PolicyConfig(rescale_gap=0.0),
+                         autoscaler=asc)
+    for i in range(3):                   # 24 slots wanted, 8 live
+        sim.submit(JobSpec(f"j{i}", 1, 8, 8, 0.0), wl(300))
+    m = sim.run()
+    per_job = sim.phases.per_job()
+    assert any(ph["boot_wait"] > 0.0 for ph in per_job.values()), \
+        "some job must wait out a node boot"
+    assert sum(m.phase_seconds.values()) == \
+        pytest.approx(m.weighted_mean_completion, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# rollups and reconciliation
+# ---------------------------------------------------------------------------
+
+def test_rollup_is_priority_weighted():
+    zero = {p: 0.0 for p in PHASES}
+    per_job = {"a": dict(zero, compute=10.0),
+               "b": dict(zero, compute=30.0, queue_wait=2.0)}
+    fleet = rollup(per_job, {"a": 1, "b": 3})
+    # (1*10 + 3*30) / 4, exactly like WMCT weighting
+    assert fleet.phase_seconds["compute"] == pytest.approx(25.0)
+    assert fleet.phase_seconds["queue_wait"] == pytest.approx(1.5)
+    assert fleet.phase_by_priority["prio1.compute"] == 10.0
+    assert fleet.phase_by_priority["prio3.compute"] == 30.0
+    assert fleet.dominant_phase == {"compute": 2}
+    assert fleet.shares()["compute"] == pytest.approx(25.0 / 26.5)
+    assert rollup({}, {}).jobs == 0
+
+
+def test_analyze_includes_causal_chain():
+    specs = make_jacobi_jobs(seed=7, n_jobs=6, submission_gap=60.0)
+    with install(Tracer()) as tr:
+        run_variant("elastic_preempt", specs, total_slots=24)
+    fleet = analyze(tr.records)
+    assert fleet.jobs == 6
+    assert fleet.longest_causal_chain >= 1
+
+
+def test_reconcile_flags_uncovered_makespan():
+    # a preempt with no resume record: the outage is never closed into the
+    # partition, so the phase sum cannot cover the makespan
+    records = [
+        {"kind": "job_submit", "t": 0.0, "job": "j", "priority": 1},
+        {"kind": "job_start", "t": 10.0, "job": "j", "slots": 4},
+        {"kind": "job_preempt", "t": 50.0, "job": "j", "slots": 4,
+         "ckpt_s": 0.0},
+        {"kind": "job_complete", "t": 100.0, "job": "j", "slots": 4},
+    ]
+    violations = reconcile(records)
+    assert len(violations) == 1 and "j:" in violations[0]
+    # restoring the resume closes the partition again
+    fixed = records[:3] + [
+        {"kind": "job_start", "t": 80.0, "job": "j", "slots": 4,
+         "resume": True, "overhead_s": 0.0},
+    ] + records[3:]
+    assert reconcile(fixed) == []

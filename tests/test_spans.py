@@ -1,0 +1,172 @@
+"""Causal span graphs (repro.obs.spans): hand-built traces assemble into the
+expected span trees and cause chains (zone_reclaim -> spot_kill -> outage ->
+resumed compute; scale_down drain -> migrate), the live SpanTap sees the
+same graph a loaded trace does, and a real cloud run with correlated zone
+reclaims produces the full length-4 chain end to end.
+"""
+from repro.cloud import (SPOT, AutoscalerConfig, BidderConfig, CloudProvider,
+                         CloudSimulator, DemandAwareBidder, NodeAutoscaler,
+                         NodePool)
+from repro.core.job import JobSpec
+from repro.core.perf_model import PiecewiseScalingModel, RescaleModel
+from repro.core.policies import PolicyConfig
+from repro.core.simulator import SimWorkload, make_jacobi_jobs, run_variant
+from repro.obs import Tracer, install
+from repro.obs.spans import (SpanGraphBuilder, SpanTap, build_span_graph,
+                             render_chains)
+
+
+def _kill_chain_records():
+    """Minimal recorder-shaped stream: one job displaced by a spot kill that
+    a zone reclaim caused, then resumed and completed."""
+    return [
+        {"kind": "run_start", "t": 0.0, "run": 1, "slots": 16},
+        {"kind": "job_submit", "t": 0.0, "job": "j1", "priority": 3,
+         "min": 4, "max": 8},
+        {"kind": "job_start", "t": 5.0, "job": "j1", "slots": 8},
+        {"kind": "zone_reclaim", "t": 100.0, "zone": "z-a",
+         "victims": ["n1"]},
+        {"kind": "spot_kill", "t": 100.0, "node": "n1", "zone": "z-a",
+         "residents": {"j1": 8}},
+        {"kind": "job_preempt", "t": 101.0, "job": "j1", "slots": 8,
+         "ckpt_s": 1.0},
+        {"kind": "kill_blast_end", "t": 101.0, "node": "n1", "jobs": 1,
+         "slots": 8, "preempts": 1},
+        {"kind": "zone_reclaim_end", "t": 101.0, "zone": "z-a"},
+        {"kind": "job_start", "t": 160.0, "job": "j1", "slots": 8,
+         "resume": True, "overhead_s": 2.0},
+        {"kind": "job_complete", "t": 400.0, "job": "j1", "slots": 8},
+        {"kind": "run_end", "t": 400.0},
+    ]
+
+
+def test_job_tree_structure_and_intervals():
+    g = build_span_graph(_kill_chain_records())
+    root = g.job_tree("j1")
+    assert root is not None and (root.t0, root.t1) == (0.0, 400.0)
+    assert root.meta == {"priority": 3, "min": 4, "max": 8}
+    names = [c.name for c in root.children]
+    assert names == ["queue_wait", "compute", "ckpt", "outage", "restore",
+                     "compute"]
+    by = {}
+    for c in root.children:
+        by.setdefault(c.name, []).append(c)
+    assert (by["queue_wait"][0].t0, by["queue_wait"][0].t1) == (0.0, 5.0)
+    assert (by["compute"][0].t0, by["compute"][0].t1) == (5.0, 101.0)
+    assert (by["ckpt"][0].t0, by["ckpt"][0].t1) == (100.0, 101.0)
+    assert (by["outage"][0].t0, by["outage"][0].t1) == (101.0, 160.0)
+    assert (by["restore"][0].t0, by["restore"][0].t1) == (160.0, 162.0)
+    assert by["compute"][1].t1 == 400.0
+
+
+def test_cause_edges_stitch_the_full_chain():
+    g = build_span_graph(_kill_chain_records())
+    root = g.job_tree("j1")
+    outage = next(c for c in root.children if c.name == "outage")
+    assert outage.cause is not None and outage.cause.name == "spot_kill"
+    assert outage.cause.cause is not None
+    assert outage.cause.cause.name == "zone_reclaim"
+    resumed = [c for c in root.children if c.name == "compute"][1]
+    chain = [s.name for s in g.chain_of(resumed)]
+    assert chain == ["zone_reclaim", "spot_kill", "outage", "compute"]
+    assert g.longest_causal_chain() == 4
+    art = render_chains(g)
+    assert "zone_reclaim[z-a]" in art and " -> " in art
+    assert "compute[j1]" in art
+
+
+def test_drain_decision_causes_migrate():
+    b = SpanGraphBuilder()
+    for r in [
+        {"kind": "job_submit", "t": 0.0, "job": "m1"},
+        {"kind": "job_start", "t": 0.0, "job": "m1", "slots": 4},
+        {"kind": "decision", "t": 50.0, "point": "scale_down",
+         "verdict": "drain_started", "inputs": {"node": "n7"}},
+        {"kind": "job_migrate", "t": 60.0, "job": "m1", "from_node": "n7",
+         "moved": 4, "overhead_s": 3.0},
+        {"kind": "decision", "t": 60.0, "point": "scale_down",
+         "verdict": "drain_complete", "inputs": {"node": "n7"}},
+        {"kind": "job_complete", "t": 100.0, "job": "m1", "slots": 4},
+    ]:
+        b.feed(r)
+    g = b.build()
+    mig = next(c for c in g.job_tree("m1").children if c.name == "migrate")
+    assert mig.cause is not None and mig.cause.name == "scale_down"
+    assert mig.cause.meta["node"] == "n7"
+    assert mig.cause.t1 == 60.0          # drain_complete closed the drain
+
+
+def test_open_spans_visible_mid_stream():
+    b = SpanGraphBuilder()
+    b.feed({"kind": "job_submit", "t": 0.0, "job": "live"})
+    b.feed({"kind": "job_start", "t": 10.0, "job": "live", "slots": 4})
+    g = b.build()
+    root = g.job_tree("live")
+    assert root.t1 is None               # still running
+    seg = next(c for c in root.children if c.name == "compute")
+    assert seg.t1 is None and seg.duration == 0.0
+    assert g.longest_causal_chain() == 1  # no cause edges yet
+
+
+def test_span_tap_matches_offline_graph_and_forwards():
+    specs = make_jacobi_jobs(seed=7, n_jobs=6, submission_gap=60.0)
+    tap = SpanTap(delegate=Tracer())
+    with install(tap):
+        run_variant("elastic_preempt", specs, total_slots=24)
+    live = tap.graph()
+    offline = build_span_graph(tap.delegate.records)
+    assert set(live.jobs) == {s.job_id for s in specs}
+    assert set(live.jobs) == set(offline.jobs)
+    for job_id, root in live.jobs.items():
+        assert root.t1 is not None, f"{job_id} never closed"
+        assert [c.name for c in root.children] == \
+            [c.name for c in offline.jobs[job_id].children]
+    assert live.longest_causal_chain() == offline.longest_causal_chain()
+
+
+def _reclaim_sim(tracer):
+    """Three-zone fleet with a hot zone under whole-zone reclaims — the
+    scenario that produces real zone_reclaim -> spot_kill -> outage chains."""
+    def wl():
+        return SimWorkload(
+            scaling=PiecewiseScalingModel(((1.0, 1.0), (64.0, 1.0))),
+            total_work=1500.0, data_bytes=1e9, rescale=RescaleModel())
+    pools = [NodePool("od", slots_per_node=8, price_per_slot_hour=0.048,
+                      boot_latency=60.0, teardown_delay=30.0,
+                      initial_nodes=1, max_nodes=2, zone="east-1a")]
+    for zone in ("east-1b", "east-1c"):
+        pools.append(NodePool(
+            f"sp-{zone}", slots_per_node=8, price_per_slot_hour=0.016,
+            market=SPOT, boot_latency=60.0, teardown_delay=30.0,
+            initial_nodes=1, max_nodes=4, spot_lifetime_mean=1e12,
+            zone=zone))
+    prov = CloudProvider(
+        pools, seed=3,
+        zone_reclaim_interval={"east-1b": 300.0}, zone_reclaim_fraction=1.0)
+    bidder = DemandAwareBidder(BidderConfig(
+        half_life=900.0, hysteresis=0.25, risk_aversion=10.0,
+        min_evidence_kills=1.0, spot_fraction_max=0.5))
+    asc = NodeAutoscaler(prov, AutoscalerConfig(
+        tick_interval=30.0, scale_up_cooldown=30.0, scale_down_cooldown=120.0,
+        idle_timeout=240.0, spot_fraction=0.6, bidder=bidder))
+    sim = CloudSimulator(prov, PolicyConfig(rescale_gap=0.0),
+                         autoscaler=asc, tracer=tracer)
+    for i in range(6):
+        sim.submit(JobSpec(f"j{i}", 1 + i % 3, 8, 8, 60.0 * i), wl())
+    return sim
+
+
+def test_cloud_run_produces_length_four_causal_chain():
+    tr = Tracer()
+    _reclaim_sim(tr).run()
+    g = build_span_graph(tr.records)
+    assert g.longest_causal_chain() >= 4
+    # at least one outage is attributed to a kill that a reclaim caused
+    attributed = [s for s in g.all_spans()
+                  if s.name == "outage" and s.cause is not None
+                  and s.cause.name == "spot_kill"
+                  and s.cause.cause is not None
+                  and s.cause.cause.name == "zone_reclaim"]
+    assert attributed
+    art = render_chains(g, min_len=3)
+    assert "zone_reclaim" in art and "spot_kill" in art

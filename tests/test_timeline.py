@@ -1,0 +1,233 @@
+"""Golden-output and consistency tests for the text Gantt renderer
+(repro.obs.timeline): exact rows for hand-built traces (overlapping jobs,
+preemption gaps, event markers), the empty-run edge cases, and a seeded
+randomized check that every rendered bar maps to a real span of the job's
+lifecycle (the hypothesis twin lives in test_timeline_properties.py).
+"""
+import random
+
+from repro.obs.timeline import render, render_last_run
+
+# ---------------------------------------------------------------------------
+# shared reference model: independent re-derivation of per-job state spans
+# ---------------------------------------------------------------------------
+
+
+def job_intervals(records):
+    """job -> {queued: [(a,b)], running: [(a,b)], marks: [(char, t)]} derived
+    from the record stream by a tiny state machine that shares no code with
+    the renderer.  Open states are closed at +inf."""
+    out = {}
+    for r in records:
+        kind = r.get("kind", "")
+        if not kind.startswith("job_") or "job" not in r:
+            continue
+        st = out.setdefault(r["job"], {"queued": [], "running": [],
+                                       "marks": [], "_state": None,
+                                       "_since": None})
+        t = r["t"]
+
+        def flip(new, st=st, t=t):
+            if st["_state"] is not None:
+                st[st["_state"]].append((st["_since"], t))
+            st["_state"], st["_since"] = new, t
+
+        if kind in ("job_submit", "job_queue"):
+            flip("queued")
+        elif kind == "job_start":
+            flip("running")
+        elif kind in ("job_preempt", "job_fail"):
+            st["marks"].append(("x", t))
+            flip("queued")
+        elif kind == "job_complete":
+            flip(None)
+        elif kind == "job_rescale":
+            st["marks"].append(("*", t))
+        elif kind == "job_migrate":
+            st["marks"].append((">", t))
+    for st in out.values():
+        if st["_state"] is not None:
+            st[st["_state"]].append((st["_since"], float("inf")))
+    return out
+
+
+def check_bars_map_to_spans(records, width):
+    """Render and assert every non-blank cell corresponds to a real span or
+    event of that job in the cell's time bucket."""
+    art = render(records, width=width)
+    lines = art.splitlines()
+    job_recs = [r for r in records
+                if r.get("kind", "").startswith("job_") and "job" in r]
+    t0 = min(r["t"] for r in job_recs)
+    t1 = max(r["t"] for r in records if "t" in r)
+    dt = max((t1 - t0) / width, 1e-9)
+    ref = job_intervals(records)
+    order, seen = [], set()
+    for r in job_recs:
+        if r["job"] not in seen:
+            seen.add(r["job"])
+            order.append(r["job"])
+    eps = dt * 1e-6 + 1e-9
+    for job, line in zip(order, lines[1:]):
+        row = line.split("|")[1]
+        assert len(row) == width
+        for i, ch in enumerate(row):
+            lo, hi = t0 + i * dt, t0 + (i + 1) * dt
+            if ch == "#":
+                assert any(a <= hi + eps and b >= lo - eps
+                           for a, b in ref[job]["running"]), \
+                    f"{job}: '#' at col {i} maps to no running span"
+            elif ch == ".":
+                assert any(a <= hi + eps and b >= lo - eps
+                           for a, b in ref[job]["queued"]), \
+                    f"{job}: '.' at col {i} maps to no queued span"
+            elif ch in "x*>":
+                assert any(m == ch and lo - eps <= t <= hi + eps
+                           for m, t in ref[job]["marks"]), \
+                    f"{job}: '{ch}' at col {i} maps to no event"
+            else:
+                assert ch == " "
+    return art
+
+
+# ---------------------------------------------------------------------------
+# golden outputs
+# ---------------------------------------------------------------------------
+
+
+def _overlap_trace():
+    return [
+        {"kind": "run_start", "t": 0.0, "run": 1, "slots": 8},
+        {"kind": "job_submit", "t": 0.0, "job": "a"},
+        {"kind": "job_start", "t": 0.0, "job": "a", "slots": 4},
+        {"kind": "job_submit", "t": 4.0, "job": "b"},
+        {"kind": "job_start", "t": 8.0, "job": "b", "slots": 4},
+        {"kind": "job_complete", "t": 8.0, "job": "a", "slots": 4},
+        {"kind": "job_complete", "t": 16.0, "job": "b", "slots": 4},
+        {"kind": "run_end", "t": 16.0},
+    ]
+
+
+def test_golden_overlapping_jobs():
+    art = render(_overlap_trace(), width=16)
+    lines = art.splitlines()
+    assert lines[0].startswith("timeline t0=0.0s t1=16.0s")
+    assert lines[1] == "       a |########        |"
+    assert lines[2] == "       b |    ....####### |"
+    assert lines[3] == "capacity |9999999999999999|"
+    assert len(lines) == 4              # no kill row without kills
+
+
+def test_golden_preemption_gap_and_markers():
+    records = [
+        {"kind": "run_start", "t": 0.0, "run": 1, "slots": 8},
+        {"kind": "job_submit", "t": 0.0, "job": "p"},
+        {"kind": "job_start", "t": 0.0, "job": "p", "slots": 8},
+        {"kind": "job_preempt", "t": 4.0, "job": "p", "slots": 8,
+         "ckpt_s": 1.0},
+        {"kind": "job_start", "t": 8.0, "job": "p", "slots": 8,
+         "resume": True, "overhead_s": 1.0},
+        {"kind": "job_rescale", "t": 10.0, "job": "p", "from": 8, "to": 4,
+         "overhead_s": 0.5},
+        {"kind": "job_complete", "t": 12.0, "job": "p", "slots": 4},
+        {"kind": "run_end", "t": 16.0},
+    ]
+    art = render(records, width=16)
+    row = art.splitlines()[1]
+    # run, preempt marker, queued gap, resumed run with rescale marker, idle
+    assert row == "       p |####x...##*#    |"
+    check_bars_map_to_spans(records, width=16)
+
+
+def test_golden_kill_rows():
+    records = _overlap_trace() + [
+        {"kind": "spot_kill", "t": 6.0, "node": "n1", "slots": 8,
+         "residents": {}},
+        {"kind": "zone_reclaim", "t": 12.0, "zone": "z", "victims": []},
+    ]
+    records.sort(key=lambda r: r.get("t", 0.0))
+    lines = render(records, width=16).splitlines()
+    kills = next(ln for ln in lines if ln.lstrip().startswith("kills"))
+    assert kills.split("|")[1] == "      K     Z   "
+
+
+def test_empty_and_degenerate_runs():
+    assert render([]) == "(no job records in trace)"
+    assert render([{"kind": "run_start", "t": 0.0, "run": 1, "slots": 4},
+                   {"kind": "run_end", "t": 9.0}]) \
+        == "(no job records in trace)"
+    assert render_last_run([]) == "(no runs in trace)"
+    # zero-width run: everything at one instant must not divide by zero
+    instant = [
+        {"kind": "run_start", "t": 5.0, "run": 1, "slots": 4},
+        {"kind": "job_submit", "t": 5.0, "job": "z"},
+        {"kind": "job_start", "t": 5.0, "job": "z", "slots": 4},
+        {"kind": "job_complete", "t": 5.0, "job": "z", "slots": 4},
+        {"kind": "run_end", "t": 5.0},
+    ]
+    art = render(instant, width=12)
+    assert "timeline" in art and "z" in art
+
+
+def test_never_started_job_renders_queued_to_the_end():
+    records = [
+        {"kind": "run_start", "t": 0.0, "run": 1, "slots": 4},
+        {"kind": "job_submit", "t": 0.0, "job": "stuck"},
+        {"kind": "job_submit", "t": 0.0, "job": "ok"},
+        {"kind": "job_start", "t": 0.0, "job": "ok", "slots": 4},
+        {"kind": "job_complete", "t": 8.0, "job": "ok", "slots": 4},
+        {"kind": "run_end", "t": 8.0},
+    ]
+    art = check_bars_map_to_spans(records, width=8)
+    stuck = next(ln for ln in art.splitlines()
+                 if ln.lstrip().startswith("stuck"))
+    assert stuck.split("|")[1] == "........"
+
+
+# ---------------------------------------------------------------------------
+# seeded randomized property (deterministic; no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+
+def random_job_trace(rng):
+    """Synthesize one run: 1-5 jobs, some preempted once, one possibly never
+    started.  Returns time-sorted records."""
+    records = [{"kind": "run_start", "t": 0.0, "run": 1, "slots": 16}]
+    per_job = []
+    for i in range(rng.randint(1, 5)):
+        job = f"j{i}"
+        t = rng.uniform(0.0, 100.0)
+        evs = [{"kind": "job_submit", "t": t, "job": job}]
+        if rng.random() < 0.15:
+            per_job.append(evs)         # never starts: queued forever
+            continue
+        t += rng.uniform(0.0, 30.0)
+        evs.append({"kind": "job_start", "t": t, "job": job, "slots": 4})
+        if rng.random() < 0.4:
+            t += rng.uniform(1.0, 50.0)
+            evs.append({"kind": "job_preempt", "t": t, "job": job,
+                        "slots": 4, "ckpt_s": 1.0})
+            t += rng.uniform(1.0, 40.0)
+            evs.append({"kind": "job_start", "t": t, "job": job, "slots": 4,
+                        "resume": True, "overhead_s": 2.0})
+        if rng.random() < 0.5:
+            t += rng.uniform(1.0, 30.0)
+            evs.append({"kind": "job_rescale", "t": t, "job": job,
+                        "from": 4, "to": 8, "overhead_s": 1.0})
+        t += rng.uniform(1.0, 80.0)
+        evs.append({"kind": "job_complete", "t": t, "job": job, "slots": 4})
+        per_job.append(evs)
+    flat = [e for evs in per_job for e in evs]
+    flat.sort(key=lambda r: r["t"])     # stable: per-job order survives
+    records.extend(flat)
+    records.append({"kind": "run_end",
+                    "t": max(r["t"] for r in records) + rng.uniform(0, 10)})
+    return records
+
+
+def test_random_traces_bars_map_to_spans():
+    rng = random.Random(1234)
+    for _ in range(60):
+        records = random_job_trace(rng)
+        for width in (13, 40, 72):
+            check_bars_map_to_spans(records, width)

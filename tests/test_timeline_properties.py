@@ -1,0 +1,66 @@
+"""Property tests for the text Gantt renderer: hypothesis drives random job
+lifecycles and chart widths against the reference state machine in
+tests/test_timeline.py — every rendered bar ('#'/'.') must map to a real
+running/queued span of that job, and every marker to a real event.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+try:                                    # pytest rootdir-style import
+    from test_timeline import check_bars_map_to_spans  # noqa: E402
+except ImportError:                     # invoked from the repo root
+    from tests.test_timeline import check_bars_map_to_spans  # noqa: E402
+
+GAPS = st.floats(min_value=0.0, max_value=60.0,
+                 allow_nan=False, allow_infinity=False)
+DURATIONS = st.floats(min_value=1e-3, max_value=120.0,
+                      allow_nan=False, allow_infinity=False)
+
+# one job lifecycle = submit gap, queue wait, then either nothing more
+# (never started) or run / preempt+outage+resume / complete durations
+JOB = st.tuples(GAPS, GAPS,
+                st.none() | st.tuples(DURATIONS,
+                                      st.none() | st.tuples(DURATIONS,
+                                                            DURATIONS)))
+
+
+def _records(jobs):
+    records = [{"kind": "run_start", "t": 0.0, "run": 1, "slots": 16}]
+    flat = []
+    for i, (submit_gap, wait, rest) in enumerate(jobs):
+        job, t = f"j{i}", submit_gap
+        evs = [{"kind": "job_submit", "t": t, "job": job}]
+        if rest is not None:
+            run_s, preempt = rest
+            t += wait
+            evs.append({"kind": "job_start", "t": t, "job": job, "slots": 4})
+            if preempt is not None:
+                run_before, outage = preempt
+                t += run_before
+                evs.append({"kind": "job_preempt", "t": t, "job": job,
+                            "slots": 4, "ckpt_s": 0.5})
+                t += outage
+                evs.append({"kind": "job_start", "t": t, "job": job,
+                            "slots": 4, "resume": True, "overhead_s": 1.0})
+            t += run_s
+            evs.append({"kind": "job_complete", "t": t, "job": job,
+                        "slots": 4})
+        flat.append(evs)
+    merged = [e for evs in flat for e in evs]
+    merged.sort(key=lambda r: r["t"])   # stable: per-job order survives
+    records.extend(merged)
+    records.append({"kind": "run_end",
+                    "t": max(r["t"] for r in records)})
+    return records
+
+
+@settings(max_examples=150, deadline=None)
+@given(jobs=st.lists(JOB, min_size=1, max_size=5),
+       width=st.integers(min_value=8, max_value=90))
+def test_every_rendered_bar_maps_to_a_real_span(jobs, width):
+    check_bars_map_to_spans(_records(jobs), width)

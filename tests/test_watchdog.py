@@ -1,0 +1,200 @@
+"""Self-profiler (repro.obs.profile) and perf watchdog (repro.obs.watchdog):
+the profiler's accumulators/report/merge and its simulator wiring, and the
+watchdog's baseline diff — including the acceptance-bar case that an
+injected 20% events/sec regression trips the default 15% tolerance — plus
+the rolling-median anomaly scan and the CLI exit codes.
+"""
+import json
+
+import pytest
+
+from repro.core.simulator import make_jacobi_jobs, run_variant
+from repro.obs.profile import SimProfiler, current_profiler, install_profiler
+from repro.obs.watchdog import (WatchdogConfig, diff_snapshots, main,
+                                rolling_median_spikes, scan_trace)
+
+# ---------------------------------------------------------------------------
+# SimProfiler
+# ---------------------------------------------------------------------------
+
+
+def test_profiler_accumulates_and_reports():
+    p = SimProfiler()
+    p.event("complete", 0.002)
+    p.event("complete", 0.004)
+    p.event("submit", 0.001)
+    p.section("heap_push", 0.0005)
+    with p.timed("metrics_tick"):
+        pass
+    p.wall_s = 0.010
+    rep = p.report()
+    assert rep["events"]["complete"] == {
+        "count": 2, "total_s": 0.006, "mean_us": 3000.0}
+    assert list(rep["events"]) == ["complete", "submit"]   # sorted by total
+    assert rep["events_total"] == 3
+    assert rep["handler_s"] == pytest.approx(0.007)
+    assert set(rep["sections"]) == {"heap_push", "metrics_tick"}
+    assert rep["unattributed_s"] <= rep["wall_s"]
+
+
+def test_profiler_merge():
+    a, b = SimProfiler(), SimProfiler()
+    a.event("submit", 0.001)
+    b.event("submit", 0.003)
+    b.event("complete", 0.002)
+    b.section("heap_pop", 0.0001)
+    a.wall_s, b.wall_s = 0.5, 1.5
+    a.merge(b)
+    rep = a.report()
+    assert rep["events"]["submit"]["count"] == 2
+    assert rep["events"]["submit"]["total_s"] == pytest.approx(0.004)
+    assert rep["events"]["complete"]["count"] == 1
+    assert rep["wall_s"] == pytest.approx(2.0)
+
+
+def test_install_profiler_scopes_and_simulator_adopts_it():
+    assert current_profiler() is None
+    specs = make_jacobi_jobs(seed=3, n_jobs=4, submission_gap=60.0)
+    prof = SimProfiler()
+    with install_profiler(prof):
+        assert current_profiler() is prof
+        m = run_variant("elastic", specs, total_slots=32)
+    assert current_profiler() is None
+    rep = prof.report()
+    # every dispatched event was timed by kind (rescales re-schedule
+    # completion events, so "complete" dispatches can exceed the job count)
+    assert rep["events_total"] == m.counters["events"]
+    assert rep["events"]["complete"]["count"] >= 4
+    assert {"heap_push", "heap_pop", "metrics_tick"} <= set(rep["sections"])
+    # unprofiled runs stay silent
+    run_variant("elastic", specs, total_slots=32)
+    assert prof.report()["events_total"] == rep["events_total"]
+
+
+# ---------------------------------------------------------------------------
+# watchdog: baseline diff
+# ---------------------------------------------------------------------------
+
+
+def snapshot(events_per_sec=100_000.0, *, null_pct=1.0, active_pct=20.0,
+             rss=100_000_000):
+    return {
+        "bench": "simcore", "schema": 2,
+        "throughput": [
+            {"n_jobs": n, "wall_s": 0.01, "events": 1000,
+             "events_per_sec": events_per_sec, "completions": n}
+            for n in (16, 32, 64, 128)],
+        "tracing": {"composed_null_overhead_pct": null_pct,
+                    "active_overhead_pct": active_pct},
+        "profile": {"events": {}, "sections": {}},
+        "peak_rss_bytes": rss,
+    }
+
+
+def test_identical_snapshots_pass():
+    rep = diff_snapshots(snapshot(), snapshot())
+    assert rep.ok, rep.summary()
+    assert {"schema", "null_overhead", "active_overhead", "throughput",
+            "peak_rss"} <= set(rep.checks)
+
+
+def test_injected_20pct_throughput_regression_trips_the_watchdog():
+    fresh = snapshot(events_per_sec=80_000.0)     # 20% below baseline
+    rep = diff_snapshots(fresh, snapshot(events_per_sec=100_000.0))
+    assert not rep.ok
+    assert len(rep.checks["throughput"]) == 4     # every rung regressed
+    assert "20.0% below baseline" in rep.checks["throughput"][0]
+    # a 10% dip stays inside the default 15% tolerance
+    assert diff_snapshots(snapshot(events_per_sec=90_000.0),
+                          snapshot(events_per_sec=100_000.0)).ok
+
+
+def test_blocking_only_skips_machine_dependent_diffs():
+    fresh = snapshot(events_per_sec=10_000.0, rss=10**12)  # way off baseline
+    rep = diff_snapshots(fresh, snapshot(), blocking_only=True)
+    assert rep.ok
+    assert "throughput" not in rep.checks and "peak_rss" not in rep.checks
+    assert any("blocking-only" in n for n in rep.notes)
+
+
+def test_invariant_violations_always_block():
+    rep = diff_snapshots(snapshot(null_pct=3.5), snapshot(),
+                         blocking_only=True)
+    assert rep.checks["null_overhead"]
+    rep = diff_snapshots(snapshot(active_pct=31.0), snapshot(),
+                         blocking_only=True)
+    assert rep.checks["active_overhead"]
+    broken = snapshot()
+    del broken["profile"]
+    assert diff_snapshots(broken, snapshot(),
+                          blocking_only=True).checks["schema"]
+
+
+def test_rss_growth_and_missing_rung_flagged():
+    rep = diff_snapshots(snapshot(rss=140_000_000), snapshot(rss=100_000_000))
+    assert rep.checks["peak_rss"]
+    fresh = snapshot()
+    fresh["throughput"] = fresh["throughput"][:-1]
+    rep = diff_snapshots(fresh, snapshot())
+    assert any("n_jobs=128 missing" in v for v in rep.checks["throughput"])
+
+
+def test_committed_baseline_passes_its_own_blocking_checks():
+    with open("benchmarks/baselines/BENCH_simcore.baseline.json") as fh:
+        base = json.load(fh)
+    rep = diff_snapshots(base, base)
+    assert rep.ok, rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# anomaly scan
+# ---------------------------------------------------------------------------
+
+
+def test_rolling_median_spikes():
+    values = [100.0] * 12 + [400.0] + [100.0] * 5
+    assert rolling_median_spikes(values, window=9, factor=3.0) == [12]
+    # a spike inside the warm-up window is never flagged
+    assert rolling_median_spikes([900.0] + [100.0] * 10,
+                                 window=9, factor=3.0) == []
+    assert rolling_median_spikes([], window=9) == []
+
+
+def test_scan_trace_flags_response_spike():
+    records = []
+    for i in range(14):
+        records.append({"kind": "job_submit", "t": float(i), "job": f"j{i}"})
+        took = 1000.0 if i == 12 else 100.0
+        records.append({"kind": "job_complete", "t": i + took,
+                        "job": f"j{i}"})
+    records.sort(key=lambda r: r["t"])
+    anomalies = scan_trace(records)
+    assert len(anomalies) == 1 and "j12" in anomalies[0]
+    assert scan_trace([r for r in records if r["job"] != "j12"]) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exit_codes_and_report_artifact(tmp_path):
+    fresh, base = tmp_path / "fresh.json", tmp_path / "base.json"
+    out = tmp_path / "diff.json"
+    base.write_text(json.dumps(snapshot()))
+
+    fresh.write_text(json.dumps(snapshot()))
+    assert main(["--fresh", str(fresh), "--baseline", str(base),
+                 "--out", str(out)]) == 0
+    assert json.loads(out.read_text())["ok"] is True
+
+    fresh.write_text(json.dumps(snapshot(events_per_sec=80_000.0)))
+    assert main(["--fresh", str(fresh), "--baseline", str(base),
+                 "--out", str(out)]) == 1
+    report = json.loads(out.read_text())
+    assert report["ok"] is False and report["checks"]["throughput"]
+    # the same regression passes --blocking-only (machine-dependent)
+    assert main(["--fresh", str(fresh), "--blocking-only"]) == 0
+    # a widened tolerance also lets it through
+    assert main(["--fresh", str(fresh), "--baseline", str(base),
+                 "--throughput-tol", "0.5"]) == 0
