@@ -79,9 +79,12 @@ def run():
         # machine-readable row off ScheduleMetrics.to_dict(); the resp_p99
         # prefix pulls the aggregate AND per-priority-class p99 response,
         # the phase_seconds prefix the per-phase makespan decomposition
+        # counters.stale_events rides along: rescale-heavy variants show how
+        # much dead weight (invalidated completions) the event heap carried
         emit(f"table1.sim.{v}", us, metrics_kv(
             m, "total_time", "utilization", "weighted_mean_response",
             "weighted_mean_completion", "rescale_count",
+            "counters.events", "counters.stale_events",
             prefixes=("percentiles.resp_p99", "phase_seconds.")))
 
     # --- "actual" columns: live controller with real training jobs ----------

@@ -94,7 +94,9 @@ def run():
                     m, "total_cost", "idle_cost",
                     "weighted_mean_completion", "total_time", "utilization",
                     "spot_preemptions", "dropped_jobs",
-                    "percentiles.resp_p99", prefixes=("phase_seconds.",)))
+                    "percentiles.resp_p99",
+                    "counters.events", "counters.stale_events",
+                    prefixes=("phase_seconds.",)))
 
     # headline verdict: autoscaled elastic beats static-max elastic on cost
     # at comparable weighted mean completion time (pure on-demand cell)

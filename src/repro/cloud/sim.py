@@ -207,6 +207,11 @@ class CloudSimulator(Simulator):
         self._record_util()
 
     def _sync_all(self):
+        """Bring every running job's progress up to ``now``.  No event
+        handler calls this anymore (the fleet-scale refactor made progress
+        sync lazy: mutators sync their own victims, and policies that read
+        ``work_remaining`` pull it through ``sync_job``); kept as a debugging
+        aid for extensions that want a globally-consistent snapshot."""
         for j in self.cluster.running_jobs():
             self._sync_progress(j)
 
@@ -337,7 +342,6 @@ class CloudSimulator(Simulator):
                                  cause="drain")
             self.cluster.cordon(node_id)
             self._record_capacity()               # capacity leaves now
-        self._sync_all()
         residents = self.cluster.residents(node_id)
         for job_id in sorted(residents,
                              key=lambda i: self.cluster.jobs[i].sort_key()):
@@ -413,7 +417,6 @@ class CloudSimulator(Simulator):
         self._record_capacity()
         # fresh capacity is a completion-shaped opportunity: run the Fig. 3
         # redistribution so queued jobs start / running jobs expand
-        self._sync_all()
         self.policy.on_job_complete(self.cluster, node.slots, self.now,
                                     self.actions)
 
@@ -429,7 +432,6 @@ class CloudSimulator(Simulator):
                 self.tracer.emit("node_billing_end", t=self.now,
                                  node=node_id, cause="spot_kill_draining")
             return
-        self._sync_all()
         # placement makes the blast set exact: ONLY the jobs resident on the
         # killed node are displaced (paper: the operator loses specific pods
         # on a specific node), never arbitrary victims elsewhere
@@ -553,7 +555,6 @@ class CloudSimulator(Simulator):
         if self.autoscaler is None:
             return
         self.counters.inc("autoscale_ticks")
-        self._sync_all()
         self.autoscaler.evaluate(self, self.now)
         # CLUES-style periodic queue re-examination: offer free capacity to
         # queued jobs that earlier passes skipped (e.g. a rescale-gap

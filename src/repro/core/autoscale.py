@@ -61,6 +61,8 @@ class CostBenefitPolicy(ElasticPolicy):
 
     def _should_expand(self, job: JobState, new_replicas: int, now: float
                        ) -> bool:
+        if self.sync_job is not None:   # lazy sync: bring work_remaining to
+            self.sync_job(job)          # `now` only where it is actually read
         wl = self.workload_fn(job)
         t_old = wl.scaling.time_per_step(job.replicas)
         t_new = wl.scaling.time_per_step(new_replicas)
@@ -70,6 +72,8 @@ class CostBenefitPolicy(ElasticPolicy):
 
     def _should_shrink(self, job: JobState, new_replicas: int, now: float
                        ) -> bool:
+        if self.sync_job is not None:
+            self.sync_job(job)
         wl = self.workload_fn(job)
         if wl.total_work > 0 and \
                 job.work_remaining / wl.total_work < self.protect_tail:

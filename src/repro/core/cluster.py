@@ -20,10 +20,14 @@ agree whenever every replica change goes through :meth:`place`/:meth:`evict`
 """
 from __future__ import annotations
 
+from bisect import bisect_left, insort
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.job import JobState, JobStatus
 from repro.core.placement import PlacementError, PlacementMap
+
+#: statuses that appear in the paper's allJobs list (and in ``_order``)
+_SCHEDULABLE = (JobStatus.RUNNING, JobStatus.QUEUED)
 
 
 class Cluster:
@@ -32,6 +36,18 @@ class Cluster:
                  slots_per_node: Optional[int] = None,
                  placement: str = "pack"):
         self.jobs: Dict[str, JobState] = {}
+        # fleet-scale accounting, maintained by the JobState watch hook:
+        # schedulable jobs in sort_key order (static, unique per job) and the
+        # running-replica sum — so running_jobs()/used_slots never scan or
+        # re-sort the whole job table.
+        self._order: List[JobState] = []
+        self._running: List[JobState] = []   # RUNNING subset, same order
+        # offerable subset, same order: jobs Fig.-3 redistribution could
+        # actually hand slots to — queued, or running below max_replicas.
+        # Running-at-max jobs (the bulk of a loaded fleet) never enter, so
+        # the per-completion scan is O(candidates), not O(running jobs).
+        self._offerable: List[JobState] = []
+        self._used = 0
         self.devices = list(devices) if devices is not None else None
         self.devices_per_slot = devices_per_slot
         if self.devices is not None:
@@ -57,8 +73,10 @@ class Cluster:
 
     @property
     def used_slots(self) -> int:
-        return sum(j.replicas for j in self.jobs.values()
-                   if j.status == JobStatus.RUNNING)
+        """Running-replica sum, maintained incrementally (stays derived from
+        job replica counts, so a job running beyond yanked capacity still
+        counts — see ``overcommit``)."""
+        return self._used
 
     @property
     def free_slots(self) -> int:
@@ -123,24 +141,87 @@ class Cluster:
     def add_job(self, job: JobState):
         assert job.job_id not in self.jobs, job.job_id
         self.jobs[job.job_id] = job
+        # account whatever state the job arrives in (tests hand-build RUNNING
+        # jobs with preset replicas to model overcommit), then watch it
+        if job.status in _SCHEDULABLE:
+            self._order_insert(self._order, job)
+            if self._offer(job, job.status, job.replicas):
+                self._order_insert(self._offerable, job)
+        if job.status == JobStatus.RUNNING:
+            self._order_insert(self._running, job)
+            self._used += job.replicas
+        job._watch = self
+
+    # -- JobState watch hook -------------------------------------------------
+    @staticmethod
+    def _order_insert(order: List[JobState], job: JobState) -> None:
+        insort(order, job, key=JobState.sort_key)
+
+    @staticmethod
+    def _order_remove(order: List[JobState], job: JobState) -> None:
+        i = bisect_left(order, job.sort_key(), key=JobState.sort_key)
+        # sort_key is unique per job, so this is the only candidate index
+        if i < len(order) and order[i] is job:
+            del order[i]
+
+    @staticmethod
+    def _offer(job: JobState, status, replicas: int) -> bool:
+        """Could redistribution hand this job slots?  Queued jobs always;
+        running jobs only below their max size (the policy's side-effect-free
+        saturation test, evaluated incrementally instead of per scan)."""
+        return status == JobStatus.QUEUED or (
+            status == JobStatus.RUNNING
+            and replicas < job.spec.max_replicas)
+
+    def _job_changed(self, job: JobState, field: str, old, new) -> None:
+        """Called by the watched ``status``/``replicas`` properties on every
+        transition of a job this cluster owns: O(log jobs) bookkeeping in
+        place of O(jobs) scans at every query."""
+        if field == "status":
+            if (old in _SCHEDULABLE) != (new in _SCHEDULABLE):
+                if new in _SCHEDULABLE:
+                    self._order_insert(self._order, job)
+                else:
+                    self._order_remove(self._order, job)
+            r = job.replicas
+            if self._offer(job, old, r) != self._offer(job, new, r):
+                if self._offer(job, new, r):
+                    self._order_insert(self._offerable, job)
+                else:
+                    self._order_remove(self._offerable, job)
+            if old == JobStatus.RUNNING:
+                self._order_remove(self._running, job)
+                self._used -= job.replicas
+            elif new == JobStatus.RUNNING:
+                self._order_insert(self._running, job)
+                self._used += job.replicas
+        elif field == "replicas" and job.status == JobStatus.RUNNING:
+            self._used += new - old
+            mx = job.spec.max_replicas
+            if (old < mx) != (new < mx):
+                if new < mx:
+                    self._order_insert(self._offerable, job)
+                else:
+                    self._order_remove(self._offerable, job)
 
     def running_jobs(self) -> List[JobState]:
         """Sorted by DECREASING priority (paper's runningJobs list)."""
-        out = [j for j in self.jobs.values() if j.status == JobStatus.RUNNING]
-        out.sort(key=JobState.sort_key)
-        return out
+        return list(self._running)
 
     def queued_jobs(self) -> List[JobState]:
-        out = [j for j in self.jobs.values() if j.status == JobStatus.QUEUED]
-        out.sort(key=JobState.sort_key)
-        return out
+        return [j for j in self._order if j.status == JobStatus.QUEUED]
 
     def all_schedulable_jobs(self) -> List[JobState]:
         """Running + queued, decreasing priority (paper's allJobs list)."""
-        out = [j for j in self.jobs.values()
-               if j.status in (JobStatus.RUNNING, JobStatus.QUEUED)]
-        out.sort(key=JobState.sort_key)
-        return out
+        return list(self._order)
+
+    def offerable_jobs(self) -> List[JobState]:
+        """The schedulable jobs that could accept slots (queued, or running
+        below max), same priority order — what Fig.-3 redistribution scans.
+        Jobs the policy would skip via its saturation test are pre-filtered
+        here incrementally, so the scan no longer touches every running job
+        on every completion."""
+        return list(self._offerable)
 
     # --- node-backed slot assignment ---------------------------------------
     def can_place(self, n: int) -> bool:

@@ -76,6 +76,13 @@ class JobState:
     version: int = 0                        # invalidates stale events
     device_ids: tuple = ()                  # live runtime: allocated devices
 
+    #: observer wired by Cluster.add_job so status/replicas transitions keep
+    #: the cluster's incremental accounting (used-slot sum, priority-ordered
+    #: schedulable list) in sync without per-query scans.  None (the class
+    #: default) on free-standing JobStates: transitions are then plain field
+    #: writes, so tests poking at un-added jobs see unchanged behavior.
+    _watch = None
+
     @property
     def job_id(self) -> str:
         return self.spec.job_id
@@ -84,14 +91,47 @@ class JobState:
     def priority(self) -> int:
         return self.spec.priority
 
+    #: cached sort_key tuple — the spec is frozen, so the key never changes
+    _key = None
+
     def sort_key(self):
         """Sorts DECREASING priority; FCFS within a priority level."""
-        return (-self.spec.priority, self.spec.submit_time, self.spec.job_id)
+        k = self._key
+        if k is None:
+            spec = self.spec
+            k = self._key = (-spec.priority, spec.submit_time, spec.job_id)
+        return k
 
     def higher_priority_than(self, other: "JobState") -> bool:
         """Strict user-priority comparison (paper's shrink-loop guard uses the
         raw priority field only; FCFS ties do not protect from shrinking)."""
         return self.spec.priority > other.spec.priority
+
+
+def _watched(name: str):
+    """Build a watched property for a JobState field: plain attribute
+    semantics, plus a change notification to ``job._watch`` (the owning
+    cluster) when one is attached.  Installed AFTER the @dataclass decorator
+    runs so the generated ``__init__``/``repr``/``eq`` assign and read
+    through it transparently."""
+    priv = "_" + name
+
+    def _get(self):
+        return self.__dict__[priv]
+
+    def _set(self, value):
+        d = self.__dict__
+        old = d.get(priv)
+        d[priv] = value
+        w = self._watch
+        if w is not None and old != value:
+            w._job_changed(self, name, old, value)
+
+    return property(_get, _set, doc=f"watched dataclass field {name!r}")
+
+
+JobState.status = _watched("status")
+JobState.replicas = _watched("replicas")
 
 
 def response_time(job: JobState) -> Optional[float]:

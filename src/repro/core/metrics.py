@@ -54,28 +54,110 @@ def _coalesce(series: List[Tuple[float, float]], t: float, value) -> None:
         series.append((t, value))
 
 
-@dataclass
+class _Accum:
+    """Running integral of one piecewise-constant stream: each record adds
+    ``last_value * (t - last_t)`` — the exact float additions ``_integrate``
+    would perform over the same in-window series, so the two agree bit-for-
+    bit whenever every record falls inside the queried window (property-
+    tested in tests/test_metrics_incremental.py).  Same-timestamp updates add
+    a zero-width (0.0-area) segment and overwrite the value: identical to
+    ``_coalesce`` + re-integrate."""
+
+    __slots__ = ("first_t", "last_t", "value", "area")
+
+    def __init__(self):
+        self.first_t: Optional[float] = None
+        self.last_t = 0.0
+        self.value = 0.0
+        self.area = 0.0
+
+    def record(self, t: float, value: float) -> None:
+        if self.first_t is None:
+            self.first_t = t
+        else:
+            self.area += self.value * (t - self.last_t)
+        self.last_t = t
+        self.value = value
+
+    def integral(self, t0: float, t1: float, initial: float) -> float:
+        """Integral over [t0, t1], assuming the stream was ``initial`` before
+        the first record.  Exact when t0 <= first_t and t1 >= last_t (the
+        simulator's metrics window always satisfies both: records start at
+        the first dispatch >= min submit and end at the last completion)."""
+        if self.first_t is None:
+            return initial * (t1 - t0)
+        return (initial * max(0.0, self.first_t - t0) + self.area
+                + self.value * max(0.0, t1 - self.last_t))
+
+
 class UtilizationLog:
-    total_slots: int
-    events: List[Tuple[float, int]] = field(default_factory=list)  # (t, used)
-    # (t, provisioned slots); empty = capacity fixed at total_slots
-    capacity_events: List[Tuple[float, int]] = field(default_factory=list)
-    # (t, fragmentation in [0,1]); empty = single-node cluster (undefined)
-    frag_events: List[Tuple[float, float]] = field(default_factory=list)
+    """Step-series log of used slots / capacity / fragmentation.
+
+    Two speeds (the fleet-scale refactor):
+
+    - ``keep_series=True`` (default): full step series retained;
+      ``average()`` integrates it offline with :func:`_integrate` —
+      bit-identical to the original implementation, and what tracers /
+      timelines / ``profile()`` consume.
+    - ``keep_series=False``: bounded memory for million-event replays.  The
+      used/fragmentation series are NOT retained; ``average()`` reads the
+      O(1) running accumulators instead.  The capacity series is always
+      retained (node lifecycle events are rare — and a fixed-capacity run
+      has none), so dynamic-capacity averaging stays exact.
+
+    The accumulators are maintained in BOTH modes, which is what lets the
+    property suite assert incremental == offline on arbitrary interleavings.
+    """
+
+    def __init__(self, total_slots: int, *, keep_series: bool = True):
+        self.total_slots = total_slots
+        self.keep_series = keep_series
+        self.events: List[Tuple[float, int]] = []            # (t, used)
+        # (t, provisioned slots); empty = capacity fixed at total_slots
+        self.capacity_events: List[Tuple[float, int]] = []
+        # (t, fragmentation in [0,1]); empty = single-node cluster (undefined)
+        self.frag_events: List[Tuple[float, float]] = []
+        self._used_acc = _Accum()
+        self._cap_acc = _Accum()
+        self._frag_acc = _Accum()
 
     def record(self, t: float, used: int):
-        _coalesce(self.events, t, used)
+        # _coalesce + _Accum.record, inlined: this lands on every scheduling
+        # action the simulator takes
+        if self.keep_series:
+            ev = self.events
+            if ev and ev[-1][0] == t:
+                ev[-1] = (t, used)
+            else:
+                ev.append((t, used))
+        acc = self._used_acc
+        if acc.first_t is None:
+            acc.first_t = t
+        else:
+            acc.area += acc.value * (t - acc.last_t)
+        acc.last_t = t
+        acc.value = used
 
     def record_fragmentation(self, t: float, frag: float):
-        _coalesce(self.frag_events, t, frag)
+        if self.keep_series:
+            _coalesce(self.frag_events, t, frag)
+        self._frag_acc.record(t, frag)
 
     def record_capacity(self, t: float, total: int):
         _coalesce(self.capacity_events, t, total)
+        self._cap_acc.record(t, total)
 
     def average(self, t0: float, t1: float) -> float:
-        if t1 <= t0 or not self.events:
+        if t1 <= t0:
             return 0.0
-        used = _integrate(self.events, t0, t1, 0)
+        if self.keep_series:
+            if not self.events:
+                return 0.0
+            used = _integrate(self.events, t0, t1, 0)
+        else:
+            if self._used_acc.first_t is None:
+                return 0.0
+            used = self._used_acc.integral(t0, t1, 0.0)
         if self.capacity_events:
             cap = _integrate(self.capacity_events, t0, t1,
                              float(self.total_slots))
@@ -84,9 +166,15 @@ class UtilizationLog:
         return used / cap if cap > 0 else 0.0
 
     def average_fragmentation(self, t0: float, t1: float) -> float:
-        if t1 <= t0 or not self.frag_events:
+        if t1 <= t0:
             return 0.0
-        return _integrate(self.frag_events, t0, t1, 0.0) / (t1 - t0)
+        if self.keep_series:
+            if not self.frag_events:
+                return 0.0
+            return _integrate(self.frag_events, t0, t1, 0.0) / (t1 - t0)
+        if self._frag_acc.first_t is None:
+            return 0.0
+        return self._frag_acc.integral(t0, t1, 0.0) / (t1 - t0)
 
     def profile(self) -> List[Tuple[float, int]]:
         return list(self.events)

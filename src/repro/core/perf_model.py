@@ -44,7 +44,29 @@ class PiecewiseScalingModel:
     points: Tuple[Tuple[float, float], ...]   # (replicas, seconds/unit)
 
     def time_per_unit(self, replicas: int) -> float:
-        return interp_piecewise(self.points, float(replicas))
+        # replica counts are small ints and the model is frozen, so every
+        # lookup after the first is a dict hit (this sits under every
+        # completion-time estimate the simulator makes)
+        try:
+            memo = self._memo
+        except AttributeError:
+            memo = {}
+            object.__setattr__(self, "_memo", memo)
+        y = memo.get(replicas)
+        if y is None:
+            xs = [p[0] for p in self.points]
+            ys = [p[1] for p in self.points]
+            x = float(replicas)
+            if x <= xs[0]:
+                y = ys[0]
+            elif x >= xs[-1]:
+                y = ys[-1]
+            else:
+                i = bisect.bisect_right(xs, x)
+                x0, x1, y0, y1 = xs[i - 1], xs[i], ys[i - 1], ys[i]
+                y = y0 + (y1 - y0) * (x - x0) / (x1 - x0)
+            memo[replicas] = y
+        return y
 
     # simulator-facing alias: one work unit == one step
     def time_per_step(self, replicas: int) -> float:

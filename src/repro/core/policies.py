@@ -64,6 +64,14 @@ class PolicyConfig:
 
 
 class ElasticPolicy:
+    #: lazy progress-sync hook (fleet-scale refactor): the simulator wires
+    #: this to its ``_sync_progress`` at run start, and extension hooks that
+    #: read simulator-owned job state (CostBenefitPolicy's ``work_remaining``
+    #: checks) call it first.  The base policy never reads such state, so the
+    #: event loop no longer syncs every running job on every submit/complete
+    #: just in case a subclass might look.
+    sync_job = None
+
     def __init__(self, cfg: PolicyConfig):
         self.cfg = cfg
         # decision-audit sink (repro.obs.decisions.DecisionLog); None (the
@@ -89,6 +97,13 @@ class ElasticPolicy:
 
     # -- helpers ------------------------------------------------------------
     def _sorted_desc(self, jobs, now: float):
+        # fast path (fleet-scale refactor): with the base static priority the
+        # key equals JobState.sort_key, and every caller passes a Cluster
+        # query result (running/queued/all_schedulable) that is already in
+        # that exact order — skip the O(n log n) re-sort per event.  Dynamic
+        # priorities (AgingPolicy) override _priority and take the sort.
+        if type(self)._priority is ElasticPolicy._priority:
+            return jobs
         return sorted(jobs, key=lambda j: (-self._priority(j, now),
                                            j.spec.submit_time, j.spec.job_id))
 
@@ -131,10 +146,11 @@ class ElasticPolicy:
         considered = [] if self.decisions is not None else None
         running_desc = self._sorted_desc(cluster.running_jobs(), now)
         num_to_free = spec.min_replicas - free
+        p_new = self._priority(job, now)    # `now` is fixed across the loop
         for j in reversed(running_desc):              # lowest priority first
             if num_to_free <= 0:
                 break
-            if self._priority(j, now) > self._priority(job, now):
+            if self._priority(j, now) > p_new:
                 if considered is not None:
                     considered.append({"job": j.job_id, "eligible": False,
                                        "why": "higher_priority"})
@@ -161,7 +177,7 @@ class ElasticPolicy:
         for j in reversed(running_desc):
             if max_to_free <= 0:
                 break
-            if self._priority(j, now) > self._priority(job, now):
+            if self._priority(j, now) > p_new:
                 break
             if not self._gap_ok(j, now):
                 continue
@@ -195,18 +211,28 @@ class ElasticPolicy:
         """Redistribute the freed slots (paper: numWorkers = freeWorkers(job))
         over running+queued jobs, highest priority first."""
         num = cluster.free_slots if self.cfg.redistribute_idle else freed_slots
+        if num <= 0:
+            return    # a yanked node can leave free_slots <= 0: nothing to
+            #           offer, so skip building the schedulable list at all
         offered = num
         grants = [] if self.decisions is not None else None
-        for j in self._sorted_desc(cluster.all_schedulable_jobs(), now):
+        # offerable_jobs pre-filters the saturation test (running at max)
+        # incrementally — the scan order and every decision are identical to
+        # walking all_schedulable_jobs, but a loaded fleet's saturated bulk
+        # is never touched
+        for j in self._sorted_desc(cluster.offerable_jobs(), now):
             if num <= 0:
                 break
-            if not self._gap_ok(j, now):
-                continue
-            if j.replicas < j.spec.max_replicas:
-                add = min(num, j.spec.max_replicas - j.replicas)
-                new_r = j.spec.feasible(j.replicas + add)
-                add = new_r - j.replicas
-                if add > 0 and new_r >= j.spec.min_replicas:
+            # the saturation test is retained verbatim: it still guards
+            # free-standing JobStates handed in by tests, and keeps the
+            # decision logic readable as Fig. 3's
+            r = j.replicas
+            spec = j.spec
+            if r < spec.max_replicas and self._gap_ok(j, now):
+                add = min(num, spec.max_replicas - r)
+                new_r = spec.feasible(r + add)
+                add = new_r - r
+                if add > 0 and new_r >= spec.min_replicas:
                     if (j.status == JobStatus.RUNNING
                             and not self._should_expand(j, new_r, now)):
                         continue

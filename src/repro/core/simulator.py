@@ -13,19 +13,20 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from functools import lru_cache
 from time import perf_counter
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.cluster import Cluster
-from repro.core.events import EventQueue
+from repro.core.events import _CANCELLED, EventQueue
 from repro.core.job import JobSpec, JobState, JobStatus
 from repro.core.metrics import ScheduleMetrics, UtilizationLog, compute_metrics
 from repro.core.perf_model import (JACOBI_SIZES, JacobiModel,
                                    PiecewiseScalingModel, RescaleModel)
 from repro.core.policies import ElasticPolicy, PolicyConfig
-from repro.obs.critical_path import PhaseLedger
+from repro.obs.critical_path import NullPhaseLedger, PhaseLedger
 from repro.obs.decisions import DecisionLog
 from repro.obs.profile import current_profiler
 from repro.obs.stats import Counters, LatencyRecorder
@@ -57,7 +58,8 @@ class _SimActions:
         # nodes count as used), so this one check also guarantees place()
         if replicas <= 0 or replicas > sim.cluster.free_slots:
             return False
-        sim.cluster.place(job.job_id, replicas)
+        job_id = job.spec.job_id
+        sim.cluster.place(job_id, replicas)
         job.status = JobStatus.RUNNING
         job.replicas = replicas
         job.last_action = sim.now
@@ -66,11 +68,11 @@ class _SimActions:
         sim.last_resume_s = 0.0
         resumed = False
         if job.preempt_count and job.work_remaining < sim.workloads[
-                job.job_id].total_work:
+                job_id].total_work:
             # resuming a preempted job: restart + restore-from-disk; the
             # cost is published (like last_preempt_ckpt_s) so extensions
             # bill exactly what the simulation charged the clock
-            wl = sim.workloads[job.job_id]
+            wl = sim.workloads[job_id]
             sim.last_resume_s = wl.rescale.resume_cost(replicas,
                                                        wl.data_bytes)
             job.overhead_until = sim.now + sim.last_resume_s
@@ -78,10 +80,10 @@ class _SimActions:
         job.last_progress_time = sim.now
         sim._schedule_completion(job)
         sim._record_util()
-        sim.latency.mark_started(job.job_id, sim.now)
-        sim.phases.on_start(job.job_id, sim.now, restore_s=sim.last_resume_s)
+        sim.latency.mark_started(job_id, sim.now)
+        sim.phases.on_start(job_id, sim.now, restore_s=sim.last_resume_s)
         if sim.tracer.enabled:
-            sim.tracer.emit("job_start", t=sim.now, job=job.job_id,
+            sim.tracer.emit("job_start", t=sim.now, job=job_id,
                             slots=replicas, priority=job.spec.priority,
                             resume=resumed, overhead_s=sim.last_resume_s)
         return True
@@ -97,22 +99,23 @@ class _SimActions:
         if replicas == job.replicas:
             return True
         from_replicas = job.replicas
-        delta = replicas - job.replicas
+        delta = replicas - from_replicas
         # shrinks always succeed — even when free_slots is negative because a
         # node was yanked (the cloud layer shrinks victims to resolve exactly
         # that deficit)
         if delta > 0 and delta > sim.cluster.free_slots:
             return False
+        job_id = job.spec.job_id
         if delta > 0:
-            sim.cluster.place(job.job_id, delta)
+            sim.cluster.place(job_id, delta)
         else:
             # a forced shrink (spot kill) names the dying node via
             # _evict_prefer so the freed slots come off it exactly — even
             # when another node is cordoned for an in-flight drain; absent
             # that, cordoned nodes are vacated first anyway
-            sim.cluster.evict(job.job_id, -delta, prefer=sim._evict_prefer)
+            sim.cluster.evict(job_id, -delta, prefer=sim._evict_prefer)
         sim._sync_progress(job)
-        wl = sim.workloads[job.job_id]
+        wl = sim.workloads[job_id]
         overhead = wl.rescale.total(job.replicas, replicas, wl.data_bytes)
         job.overhead_until = max(sim.now, job.overhead_until) + overhead
         job.replicas = replicas
@@ -122,9 +125,9 @@ class _SimActions:
         sim._schedule_completion(job)
         sim._record_util()
         sim.counters.inc("rescales")
-        sim.phases.on_rescale(job.job_id, sim.now, overhead)
+        sim.phases.on_rescale(job_id, sim.now, overhead)
         if sim.tracer.enabled:
-            sim.tracer.emit("job_rescale", t=sim.now, job=job.job_id,
+            sim.tracer.emit("job_rescale", t=sim.now, job=job_id,
                             **{"from": from_replicas, "to": replicas},
                             overhead_s=overhead)
         return True
@@ -158,6 +161,7 @@ class _SimActions:
         job.status = JobStatus.QUEUED
         job.replicas = 0
         job.version += 1            # invalidate its completion event
+        sim._cancel_completion(job)
         job.preempt_count += 1
         # queued jobs must always pass the rescale-gap check (job.py: Fig. 3
         # hands slots to queued jobs regardless of recency) — anchoring
@@ -171,14 +175,23 @@ class Simulator:
     def __init__(self, total_slots: int, policy_cfg: PolicyConfig, *,
                  placement: str = "pack",
                  slots_per_node: Optional[int] = None, tracer=None,
-                 profiler=None):
+                 profiler=None, util_series: bool = True,
+                 track_phases: bool = True):
+        """``util_series=False`` / ``track_phases=False`` put the simulator
+        in bounded-memory fleet mode (benchmarks/bench_simcore.py's ~1M-job
+        replay): utilization integrals run on O(1) accumulators instead of a
+        retained step series, and per-job phase decomposition is skipped."""
         self.cluster = Cluster(total_slots, slots_per_node=slots_per_node,
                                placement=placement)
         self.policy = ElasticPolicy(policy_cfg)
         self.queue = EventQueue()
         self.actions = _SimActions(self)
         self.workloads: Dict[str, SimWorkload] = {}
-        self.util = UtilizationLog(total_slots)
+        self.util = UtilizationLog(total_slots, keep_series=util_series)
+        # job_id -> queued completion Event, so a rescale CANCELS the stale
+        # completion in place (tombstone, dropped inside the heap) instead of
+        # paying a full dispatch when it eventually surfaces
+        self._pending_complete: Dict[str, object] = {}
         self.now = 0.0
         self.total_overhead = 0.0
         self.last_preempt_ckpt_s = 0.0  # ckpt seconds of the latest preempt
@@ -193,8 +206,9 @@ class Simulator:
         self.queue.profiler = self.profiler
         self.counters = Counters()
         self.latency = LatencyRecorder()
-        # always-on makespan decomposition (repro.obs.critical_path)
-        self.phases = PhaseLedger()
+        # makespan decomposition (repro.obs.critical_path); a no-op ledger in
+        # bounded-memory fleet mode
+        self.phases = PhaseLedger() if track_phases else NullPhaseLedger()
         self.run_id = self.tracer.next_run_id()
         if self.tracer.enabled:
             # emitted from __init__ so subclass capacity bootstrap (cloud
@@ -225,12 +239,22 @@ class Simulator:
             job.work_remaining -= (self.now - start) * self._rate(job)
         job.last_progress_time = self.now
 
+    def _cancel_completion(self, job: JobState) -> None:
+        prev = self._pending_complete.pop(job.job_id, None)
+        if prev is not None:
+            self.queue.cancel(prev)
+
     def _schedule_completion(self, job: JobState):
         job.version += 1
+        job_id = job.spec.job_id
+        prev = self._pending_complete.pop(job_id, None)
+        if prev is not None:            # the old event is now a tombstone
+            self.queue.cancel(prev)
         begin = max(self.now, job.overhead_until)
         t_done = begin + job.work_remaining * \
-            self.workloads[job.job_id].scaling.time_per_step(job.replicas)
-        self.queue.push(t_done, "complete", (job.job_id, job.version))
+            self.workloads[job_id].scaling.time_per_step(job.replicas)
+        self._pending_complete[job_id] = self.queue.push(
+            t_done, "complete", (job_id, job.version))
 
     # -- API -----------------------------------------------------------------
     def submit(self, spec: JobSpec, workload: SimWorkload):
@@ -246,25 +270,51 @@ class Simulator:
     def run(self) -> ScheduleMetrics:
         if self.tracer.enabled:
             self._wire_decisions()
+        # lazy progress sync: extension hooks that read work_remaining
+        # (CostBenefitPolicy) pull the job up to date themselves instead of
+        # the loop syncing every running job on every submit/complete
+        self.policy.sync_job = self._sync_progress
         counters = self.counters
         prof = self.profiler
-        while len(self.queue):
-            if self._should_stop():
-                break
+        batch: List = []
+        stop = False
+        n_events = 0    # folded into counters once, after the loop
+        # one heap pass drains ALL events sharing the earliest timestamp
+        # (tombstoned stale completions are dropped inside the pass); events
+        # within the batch dispatch in exactly the old pop-by-pop order
+        while not stop:
             if prof is None:
-                ev = self.queue.pop()
-                self.now = max(self.now, ev.time)
-                counters.inc("events")
-                self._dispatch(ev)
+                if not self.queue.pop_batch(batch):
+                    break
             else:
                 t0 = perf_counter()
-                ev = self.queue.pop()
-                t1 = perf_counter()
-                prof.section("heap_pop", t1 - t0)
-                self.now = max(self.now, ev.time)
-                counters.inc("events")
-                self._dispatch(ev)
-                prof.event(ev.kind, perf_counter() - t1)
+                n = self.queue.pop_batch(batch)
+                prof.section("heap_pop", perf_counter() - t0)
+                if not n:
+                    break
+            for ev in batch:
+                if self._should_stop():
+                    stop = True
+                    break
+                # an earlier event in THIS batch may have cancelled this one
+                # (a same-timestamp admission shrinking a running job kills
+                # its completion event); the per-event pop() used to drop it
+                # at pop time, so the batch loop must re-check
+                if ev.kind is _CANCELLED:
+                    self.queue._popped(ev)
+                    continue
+                if prof is None:
+                    self.now = max(self.now, ev.time)
+                    n_events += 1
+                    self._dispatch(ev)
+                else:
+                    t1 = perf_counter()
+                    self.now = max(self.now, ev.time)
+                    n_events += 1
+                    self._dispatch(ev)
+                    prof.event(ev.kind, perf_counter() - t1)
+        counters.inc("events", n_events)
+        counters.inc("stale_events", self.queue.stale_total)
         metrics = self._final_metrics()
         if self.tracer.enabled:
             self.tracer.emit(
@@ -292,13 +342,14 @@ class Simulator:
                                  priority=job.spec.priority,
                                  min=job.spec.min_replicas,
                                  max=job.spec.max_replicas)
-            # policies may consult work_remaining (cost-benefit): sync all
-            for j in self.cluster.running_jobs():
-                self._sync_progress(j)
+            # policies that consult work_remaining (cost-benefit) sync the
+            # job themselves via the sync_job hook — no sync-all pass here
             self.policy.on_new_job(self.cluster, job, self.now,
                                    self.actions)
         elif ev.kind == "complete":
             job_id, version = ev.payload
+            if self._pending_complete.get(job_id) is ev:
+                del self._pending_complete[job_id]
             job = self.cluster.jobs[job_id]
             if job.version != version or job.status != JobStatus.RUNNING:
                 return         # stale event (job was rescaled since)
@@ -307,19 +358,17 @@ class Simulator:
                 self._schedule_completion(job)
                 return
             freed = job.replicas
-            self.cluster.evict(job.job_id)
+            self.cluster.evict(job_id)
             job.status = JobStatus.COMPLETED
             job.end_time = self.now
             job.replicas = 0
             self._record_util()
             self.counters.inc("completions")
             self.latency.observe_completed(job)
-            self.phases.on_complete(job.job_id, self.now)
+            self.phases.on_complete(job_id, self.now)
             if self.tracer.enabled:
                 self.tracer.emit("job_complete", t=self.now,
                                  job=job.job_id, slots=freed)
-            for j in self.cluster.running_jobs():
-                self._sync_progress(j)
             self.policy.on_job_complete(self.cluster, freed, self.now,
                                         self.actions)
         else:
@@ -367,6 +416,15 @@ def jacobi_workload(size: str) -> SimWorkload:
         total_work=float(d["timesteps"]),
         data_bytes=model.data_bytes,
     )
+
+
+@lru_cache(maxsize=None)
+def _jacobi_workload_cached(size: str) -> SimWorkload:
+    """One shared SimWorkload per size for the default run_variant path:
+    the simulator only ever reads workloads (scaling/total_work/data_bytes/
+    rescale are immutable), and synthesizing the scaling points is ~10x the
+    cost of a simulated event."""
+    return jacobi_workload(size)
 
 
 def make_jacobi_jobs(seed: int, n_jobs: int = 16, submission_gap: float = 90.0,
@@ -427,7 +485,7 @@ def run_variant(variant: str, specs: Sequence[JobSpec], *, total_slots: int,
                 workload_fn: Callable[[JobSpec], SimWorkload] = None
                 ) -> ScheduleMetrics:
     """Run one scheduling policy variant (paper §4.3's four schedulers)."""
-    workload_fn = workload_fn or (lambda s: jacobi_workload(s.workload))
+    workload_fn = workload_fn or (lambda s: _jacobi_workload_cached(s.workload))
     specs, pcfg, policy = variant_setup(variant, specs,
                                         rescale_gap=rescale_gap,
                                         launcher_reserve=launcher_reserve)

@@ -147,10 +147,13 @@ class _JobPhases:
         """The finalized partition, or None while the job is still live."""
         if self.end_t is None or not self.started:
             return None
-        out = {p: 0.0 for p in PHASES}
+        out = dict.fromkeys(PHASES, 0.0)
         first_start = self.segments[0][0] if self.segments else self.end_t
-        init = (self.submit_t, first_start)
-        boot = overlap(init, merge_intervals(boot_windows))
+        if boot_windows:
+            init = (self.submit_t, first_start)
+            boot = overlap(init, merge_intervals(boot_windows))
+        else:       # pure-sim run: no node boots (int 0, like sum(()))
+            boot = 0
         out["boot_wait"] = boot
         out["queue_wait"] = max(0.0, (first_start - self.submit_t) - boot)
         out["outage"] = sum(t1 - t0 for t0, t1 in outages)
@@ -237,6 +240,37 @@ class PhaseLedger:
         return self._prio.get(job_id, 1)
 
 
+class NullPhaseLedger(PhaseLedger):
+    """No-op ledger for bounded-memory fleet runs (``Simulator(...,
+    track_phases=False)``): a million-job replay must not retain per-job
+    phase state it will never roll up.  ``per_job()`` stays empty, so
+    ``compute_metrics`` simply leaves the ``phase_*`` fields at their
+    defaults."""
+
+    def on_submit(self, job_id, t, priority=None):
+        pass
+
+    def on_start(self, job_id, t, restore_s=0.0):
+        pass
+
+    def on_rescale(self, job_id, t, overhead_s):
+        pass
+
+    on_migrate = on_rescale
+
+    def on_preempt(self, job_id, t, ckpt_s):
+        pass
+
+    def on_fail(self, job_id, t):
+        pass
+
+    def on_complete(self, job_id, t):
+        pass
+
+    def note_boot_window(self, t0, t1):
+        pass
+
+
 # ---------------------------------------------------------------------------
 # Offline: feed a flight-recorder stream through the same ledger
 # ---------------------------------------------------------------------------
@@ -314,12 +348,15 @@ def rollup(per_job: Dict[str, Dict[str, float]],
     dominant: Dict[str, int] = {}
     for job_id, ph in per_job.items():
         w = priorities.get(job_id, 1)
-        cls = by_prio.setdefault(w, {p: 0.0 for p in PHASES})
+        cls = by_prio.setdefault(w, dict.fromkeys(PHASES, 0.0))
         counts[w] = counts.get(w, 0) + 1
+        top, top_v = None, -1.0     # first maximal phase, like max(PHASES)
         for p in PHASES:
-            agg[p] += w * ph.get(p, 0.0)
-            cls[p] += ph.get(p, 0.0)
-        top = max(PHASES, key=lambda p: ph.get(p, 0.0))
+            v = ph.get(p, 0.0)
+            agg[p] += w * v
+            cls[p] += v
+            if v > top_v:
+                top, top_v = p, v
         dominant[top] = dominant.get(top, 0) + 1
     flat = {}
     for k in sorted(by_prio):

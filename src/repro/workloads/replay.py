@@ -107,14 +107,20 @@ def _prepare(variant: str, specs: List[JobSpec], cfg: ReplayConfig):
 
 
 def replay_variant(trace: Trace, variant: str, cfg: ReplayConfig,
-                   *, tracer=None, profiler=None) -> ScheduleMetrics:
+                   *, slots_per_node: Optional[int] = None, tracer=None,
+                   profiler=None, util_series: bool = True,
+                   track_phases: bool = True) -> ScheduleMetrics:
     """Replay through the fixed-capacity :class:`Simulator` (the paper's
-    §4.3 frame) at ``cfg.cluster_slots`` slots."""
+    §4.3 frame) at ``cfg.cluster_slots`` slots.  ``util_series=False`` /
+    ``track_phases=False`` select the simulator's bounded-memory fleet mode
+    (O(1) utilization accumulators, no per-job phase ledger) — what the
+    ~1M-job bench_simcore replay runs in."""
     pairs = compile_trace(trace, cfg)
     wls: Dict[str, SimWorkload] = {s.job_id: w for s, w in pairs}
     specs, pcfg, policy = _prepare(variant, [s for s, _ in pairs], cfg)
-    sim = Simulator(cfg.cluster_slots, pcfg, tracer=tracer,
-                    profiler=profiler)
+    sim = Simulator(cfg.cluster_slots, pcfg, slots_per_node=slots_per_node,
+                    tracer=tracer, profiler=profiler,
+                    util_series=util_series, track_phases=track_phases)
     if policy is not None:
         sim.policy = policy
     for s in specs:

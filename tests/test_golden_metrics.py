@@ -1,0 +1,100 @@
+"""Golden equivalence gate for the fleet-scale hot-path refactor.
+
+``tests/golden/schedule_metrics.json`` is a committed snapshot of
+``ScheduleMetrics.to_dict()`` for the seeded table1 simulation grid (all
+four policy variants) and two representative table2 cloud cells.  The
+simulators must reproduce it EXACTLY — same floats, same counters, same
+percentile and phase decompositions — so any semantic drift in the event
+loop, metrics accumulators, placement, or policy ordering fails here
+before it can bend a benchmark table.
+
+Provenance: the fixture pins the POST-refactor behavior.  Against the
+pre-refactor simulators the values agree at benchmark-table precision but
+not to the last float bit on rescale-heavy runs: the mandated lazy
+progress sync accrues ``(t3-t1)*rate`` in one step where the old
+sync-everyone-per-event loop accrued ``(t2-t1)*rate + (t3-t2)*rate`` —
+equal in exact arithmetic, ~1e-13 apart in floats.  The counters also
+changed meaning deliberately: ``events`` now counts dispatched events only,
+with fast-dropped tombstones split out as ``stale_events``.
+
+Comparison happens on the canonical JSON form (``json.loads(json.dumps(
+to_dict()))``): no tolerances anywhere; the round-trip only normalizes
+containers (tuples to lists), never float values.
+
+Regenerate (ONLY for an intentional, explained behavior change)::
+
+    PYTHONPATH=src python tests/test_golden_metrics.py --regen
+"""
+import json
+import os
+
+import pytest
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "golden",
+                       "schedule_metrics.json")
+
+
+def _canon(metrics) -> dict:
+    return json.loads(json.dumps(metrics.to_dict(), sort_keys=True))
+
+
+def _table1_cases():
+    from repro.core.simulator import (VARIANTS, make_jacobi_jobs,
+                                      run_variant)
+    specs = make_jacobi_jobs(seed=7, n_jobs=16, submission_gap=90.0)
+    return {f"table1.sim.{v}": _canon(
+        run_variant(v, specs, total_slots=64, rescale_gap=180.0))
+        for v in VARIANTS}
+
+
+def _table2_cases():
+    from benchmarks.table2_cloud_cost import run_cell
+    cells = (("elastic", "static_max", "on_demand"),
+             ("elastic", "autoscaled", "spot30"))
+    return {f"table2.{p}.{prov}.{mkt}": _canon(run_cell(p, prov, mkt))
+            for p, prov, mkt in cells}
+
+
+def _compute_all() -> dict:
+    out = _table1_cases()
+    out.update(_table2_cases())
+    return out
+
+
+@pytest.fixture(scope="module")
+def golden() -> dict:
+    with open(FIXTURE) as fh:
+        return json.load(fh)
+
+
+def test_fixture_covers_expected_scenarios(golden):
+    assert sorted(golden) == sorted(_compute_all_names())
+
+
+def _compute_all_names():
+    return (["table1.sim.rigid_min", "table1.sim.rigid_max",
+             "table1.sim.moldable", "table1.sim.elastic",
+             "table2.elastic.static_max.on_demand",
+             "table2.elastic.autoscaled.spot30"])
+
+
+def test_refactored_simulators_reproduce_golden_exactly(golden):
+    fresh = _compute_all()
+    for name in sorted(golden):
+        assert fresh[name] == golden[name], (
+            f"{name}: ScheduleMetrics drifted from the committed golden "
+            f"fixture — the refactor changed observable behavior")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" not in sys.argv:
+        sys.exit("refusing: pass --regen to overwrite the golden fixture")
+    # direct-script runs lack pytest's rootdir on sys.path (benchmarks.*)
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as fh:
+        json.dump(_compute_all(), fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {FIXTURE}")

@@ -1,0 +1,112 @@
+"""Incremental == offline for :class:`UtilizationLog` (fleet-scale refactor).
+
+The simulator's bounded-memory fleet mode (``keep_series=False``) answers
+``average()`` / ``average_fragmentation()`` from O(1) running accumulators
+instead of re-integrating a retained step series.  These tests pin the
+refactor's contract: on ANY interleaved record / record_capacity /
+record_fragmentation sequence — including same-timestamp coalescing — the
+accumulator result equals the offline ``_integrate`` result bit-for-bit
+over the simulator's query window (t0 <= first record, t1 >= last record).
+
+The hypothesis suite explores arbitrary interleavings; the seeded
+stdlib-random sweep below it keeps the property exercised in environments
+without hypothesis installed (this container's tier-1 run).
+"""
+import random
+
+import pytest
+
+from repro.core.metrics import UtilizationLog
+
+#: (kind, dt, value) — dt=0 lands on the previous timestamp (coalescing)
+KINDS = ("used", "cap", "frag")
+
+
+def _apply(ops, *, total_slots=64):
+    """Feed one op sequence to a series-keeping and a fleet-mode log."""
+    offline = UtilizationLog(total_slots, keep_series=True)
+    fleet = UtilizationLog(total_slots, keep_series=False)
+    t = 0.0
+    for kind, dt, value in ops:
+        t += dt
+        for log in (offline, fleet):
+            if kind == "used":
+                log.record(t, int(value))
+            elif kind == "cap":
+                log.record_capacity(t, int(value))
+            else:
+                log.record_fragmentation(t, min(1.0, value / 128.0))
+    return offline, fleet, t
+
+
+def _assert_equal(offline, fleet, t_last):
+    # the simulator always queries [min submit, max completion], which
+    # brackets every record — the window where the accumulator is exact
+    for t0, t1 in ((0.0, t_last), (0.0, t_last + 7.5), (-3.0, t_last + 1.0)):
+        assert offline.average(t0, t1) == fleet.average(t0, t1)
+        assert offline.average_fragmentation(t0, t1) \
+            == fleet.average_fragmentation(t0, t1)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis suite (skipped without the dependency, like the other
+# property-test modules)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    given = None
+
+needs_hypothesis = pytest.mark.skipif(
+    given is None,
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+
+
+if given is not None:
+    op_lists = st.lists(
+        st.tuples(st.sampled_from(KINDS),
+                  st.one_of(st.just(0.0),
+                            st.floats(0.0, 500.0, allow_nan=False)),
+                  st.floats(0.0, 128.0, allow_nan=False)),
+        max_size=60)
+
+    @needs_hypothesis
+    @settings(max_examples=200, deadline=None)
+    @given(ops=op_lists)
+    def test_incremental_matches_offline_hypothesis(ops):
+        _assert_equal(*_apply(ops))
+else:
+    @needs_hypothesis
+    def test_incremental_matches_offline_hypothesis():
+        raise AssertionError("unreachable: skipped without hypothesis")
+
+
+# ---------------------------------------------------------------------------
+# stdlib-random fallback: same property, seeded sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(40))
+def test_incremental_matches_offline_random(seed):
+    rng = random.Random(seed)
+    ops = []
+    for _ in range(rng.randrange(0, 80)):
+        dt = 0.0 if rng.random() < 0.3 else rng.uniform(0.0, 500.0)
+        ops.append((rng.choice(KINDS), dt, rng.uniform(0.0, 128.0)))
+    _assert_equal(*_apply(ops))
+
+
+def test_same_timestamp_coalescing_exact():
+    """Several state changes at one instant: only the last value stands, and
+    both modes agree (the zero-width segments contribute 0.0 area)."""
+    ops = [("used", 0.0, 8), ("used", 0.0, 16), ("used", 0.0, 4),
+           ("used", 10.0, 32), ("frag", 0.0, 64.0), ("frag", 0.0, 16.0),
+           ("cap", 5.0, 48), ("cap", 0.0, 64), ("used", 0.0, 10)]
+    offline, fleet, t = _apply(ops)
+    _assert_equal(offline, fleet, t)
+    # the retained series really did coalesce
+    assert [u for _, u in offline.events] == [4, 32, 10]
+
+
+def test_empty_log_agrees():
+    _assert_equal(*_apply([]))

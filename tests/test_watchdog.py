@@ -121,7 +121,7 @@ def test_invariant_violations_always_block():
     rep = diff_snapshots(snapshot(null_pct=3.5), snapshot(),
                          blocking_only=True)
     assert rep.checks["null_overhead"]
-    rep = diff_snapshots(snapshot(active_pct=31.0), snapshot(),
+    rep = diff_snapshots(snapshot(active_pct=91.0), snapshot(),
                          blocking_only=True)
     assert rep.checks["active_overhead"]
     broken = snapshot()
@@ -137,6 +137,40 @@ def test_rss_growth_and_missing_rung_flagged():
     fresh["throughput"] = fresh["throughput"][:-1]
     rep = diff_snapshots(fresh, snapshot())
     assert any("n_jobs=128 missing" in v for v in rep.checks["throughput"])
+
+
+def fleet_snapshot(retired_per_sec=9_000.0, *, full_row=True, **kw):
+    snap = snapshot(**kw)
+    snap["schema"] = 3
+    snap["fleet"] = [{"name": "smoke", "n_jobs": 20_000, "wall_s": 5.0,
+                      "events_retired_per_sec": retired_per_sec}]
+    if full_row:
+        snap["fleet"].append({"name": "full", "n_jobs": 1_000_000,
+                              "wall_s": 700.0,
+                              "events_retired_per_sec": 3_500.0})
+    return snap
+
+
+def test_fleet_row_regression_trips_the_watchdog():
+    # 30% below baseline: outside the 25% fleet tolerance
+    rep = diff_snapshots(fleet_snapshot(6_300.0), fleet_snapshot(9_000.0))
+    assert rep.checks["fleet"] and "smoke" in rep.checks["fleet"][0]
+    # 20% below: inside tolerance (fleet rows run once — noisier)
+    assert diff_snapshots(fleet_snapshot(7_200.0), fleet_snapshot(9_000.0)).ok
+
+
+def test_missing_full_fleet_row_is_a_note_not_a_failure():
+    fresh = fleet_snapshot(full_row=False)     # everyday run: smoke only
+    rep = diff_snapshots(fresh, fleet_snapshot())
+    assert rep.ok, rep.summary()
+    assert any("full" in n and "diff skipped" in n for n in rep.notes)
+
+
+def test_schema3_without_fleet_rows_blocks():
+    broken = fleet_snapshot()
+    broken["fleet"] = []
+    rep = diff_snapshots(broken, fleet_snapshot(), blocking_only=True)
+    assert rep.checks["schema"]
 
 
 def test_committed_baseline_passes_its_own_blocking_checks():
