@@ -27,6 +27,10 @@ the discrete-event core is diffable across commits):
   The smoke row (~20k jobs, 1.25k nodes, 3 days) always runs — it is the
   CI regression gate; pass ``--fleet-full`` (or set ``BENCH_FLEET_FULL=1``)
   for the month-long 10k-node ~1M-job row the ROADMAP acceptance names.
+- **ckpt** (schema 4) — the checkpoint fast lane: full vs. delta disk-save
+  walls and bytes (the delta must write strictly less — a machine-
+  independent watchdog invariant) plus async submit/barrier latency, with
+  the barrier required to publish the last submitted step.
 
 Walls are best-of-N (min), not median: the grid is ~10 ms, where scheduler
 noise is strictly additive — the minimum is the least-noisy estimate.  The
@@ -259,6 +263,74 @@ def bench_profile():
     return report
 
 
+def bench_ckpt():
+    """Checkpoint fast-lane micro-bench (schema 4): full vs. delta save
+    bytes/walls and async submit/barrier latency on a table5-shaped state
+    tree (cold-weight majority + hot optimizer minority), pure numpy — no
+    devices involved, so the rows are stable enough to diff."""
+    import shutil
+
+    import numpy as np
+
+    from repro.checkpoint import AsyncCheckpointer, DiskCheckpointStore
+
+    rng = np.random.default_rng(0)
+    cold = {f"layer{i}": rng.standard_normal(65536).astype(np.float32)
+            for i in range(8)}
+    hot = {f"slab{i}": rng.standard_normal(16384).astype(np.float32)
+           for i in range(4)}
+    root = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        store = DiskCheckpointStore(root)
+        full_wall = _best_wall(
+            lambda: store.save("job", 0, {"weights": cold, "opt": hot}),
+            GRID_REPEATS)
+        full_bytes = store.last_bytes_written
+
+        step = [0]
+
+        def delta_save():
+            step[0] += 1
+            hot2 = {k: v + step[0] for k, v in hot.items()}
+            store.save("job", step[0], {"weights": cold, "opt": hot2},
+                       delta=True)
+        delta_wall = _best_wall(delta_save, GRID_REPEATS)
+        delta_bytes = store.last_bytes_written
+        load_wall = _best_wall(lambda: store.load("job"), GRID_REPEATS)
+
+        ac = AsyncCheckpointer(store, delta=True)
+        t0 = time.perf_counter()
+        for i in range(3):
+            hot2 = {k: v + 100 + i for k, v in hot.items()}
+            ac.submit("job", 1000 + i, {"weights": cold, "opt": hot2})
+        submit_wall = (time.perf_counter() - t0) / 3
+        t0 = time.perf_counter()
+        ac.barrier()
+        barrier_wall = time.perf_counter() - t0
+        published = store.latest_step("job")
+        ac.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    rows = dict(
+        full_save_us=full_wall * 1e6, delta_save_us=delta_wall * 1e6,
+        load_us=load_wall * 1e6, full_bytes=full_bytes,
+        delta_bytes=delta_bytes,
+        delta_ratio=delta_bytes / full_bytes if full_bytes else 1.0,
+        async_submit_us=submit_wall * 1e6,
+        async_barrier_us=barrier_wall * 1e6,
+        async_published_latest=published == 1002)
+    emit("bench_simcore.ckpt.full_save", rows["full_save_us"],
+         kv(bytes=full_bytes))
+    emit("bench_simcore.ckpt.delta_save", rows["delta_save_us"],
+         kv(bytes=delta_bytes, ratio=round(rows["delta_ratio"], 3)))
+    emit("bench_simcore.ckpt.load", rows["load_us"], "")
+    emit("bench_simcore.ckpt.async", rows["async_submit_us"],
+         kv("PASS" if rows["async_published_latest"] else "FAIL",
+            barrier_us=rows["async_barrier_us"]))
+    return rows
+
+
 def _peak_rss_bytes():
     """High-water RSS of this process (the bench is the workload), or None
     where the resource module is unavailable (non-POSIX)."""
@@ -276,10 +348,11 @@ def run(out: str = "BENCH_simcore.json", fleet_full: bool = False):
     tracing = bench_tracing_overhead()
     profile = bench_profile()
     fleet = bench_fleet(full=fleet_full)
+    ckpt = bench_ckpt()
     peak_rss = _peak_rss_bytes()
-    payload = dict(bench="simcore", schema=3, throughput=throughput,
+    payload = dict(bench="simcore", schema=4, throughput=throughput,
                    tracing=tracing, profile=profile, fleet=fleet,
-                   peak_rss_bytes=peak_rss)
+                   ckpt=ckpt, peak_rss_bytes=peak_rss)
     with open(out, "w") as fh:
         json.dump(payload, fh, indent=2)
         fh.write("\n")

@@ -23,7 +23,7 @@ import sys
 from benchmarks.common import emit, kv, phases_kv
 
 HELPER = r"""
-import json, sys
+import json
 import jax
 from repro.configs import smoke_config
 from repro.core.elastic import ElasticTrainer, TrainJobConfig
@@ -37,32 +37,90 @@ for arch, width in [("yi-6b", 64), ("yi-6b", 128)]:
                                                 total_steps=4, seed=0),
                             devs[:r0])
         tr.step()
-        t = tr.rescale(devs[:r1])
-        out.append(dict(width=width, r0=r0, r1=r1, **t.as_dict()))
+        t = tr.rescale(devs[:r1], via_host=True)      # legacy host path
+        out.append(dict(width=width, r0=r0, r1=r1, path="host",
+                        **t.as_dict()))
+        tr.rescale(devs[:r0], via_host=True)          # back; r1 now warm
+        t = tr.rescale(devs[:r1])                     # fast: auto p2p + warm
+        out.append(dict(width=width, r0=r0, r1=r1, path=t.path,
+                        **t.as_dict()))
+print("JSON" + json.dumps(out))
+"""
+
+KERNEL_HELPER = r"""
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.checkpoint.reshard import snapshot_to_host
+from repro.kernels.pack import packed_snapshot_to_host
+
+# on CPU the Pallas kernel runs in interpret mode (Python-speed, validation
+# only); the packed-vs-perleaf ratio is meaningful on a real TPU backend
+mode = "compiled" if jax.default_backend() == "tpu" else "interpret"
+rng = np.random.default_rng(0)
+def tree_of(n_leaves, leaf_elems):
+    return {f"layer{i:02d}": {"w": jnp.asarray(
+        rng.standard_normal(leaf_elems).astype(np.float32))}
+        for i in range(n_leaves)}
+
+out = []
+for n_leaves, leaf_elems in [(16, 4096), (64, 4096), (64, 65536)]:
+    tree = tree_of(n_leaves, leaf_elems)
+    for name, fn in [("perleaf", lambda t: snapshot_to_host(t)),
+                     ("packed", lambda t: packed_snapshot_to_host(t))]:
+        fn(tree)                                    # warm (trace/compile)
+        t0 = time.perf_counter(); reps = 3
+        for _ in range(reps):
+            fn(tree)
+        dt = (time.perf_counter() - t0) / reps
+        out.append(dict(kind=name, leaves=n_leaves, elems=leaf_elems,
+                        seconds=dt, mode=mode))
 print("JSON" + json.dumps(out))
 """
 
 
-def _live_rows():
+def _helper_rows(code: str, tag: str):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.abspath("src") + os.pathsep + \
         env.get("PYTHONPATH", "")
-    proc = subprocess.run([sys.executable, "-c", HELPER],
+    proc = subprocess.run([sys.executable, "-c", code],
                           capture_output=True, text=True, timeout=1800,
                           env=env)
-    rows = []
     for line in proc.stdout.splitlines():
         if line.startswith("JSON"):
-            rows = json.loads(line[4:])
-    for r in rows:
+            return json.loads(line[4:])
+    emit(f"fig5.{tag}.FAILED", 0.0, proc.stderr[-200:].replace(",", ";"))
+    return []
+
+
+def _live_rows():
+    for r in _helper_rows(HELPER, "live"):
         kind = "shrink" if r["r1"] < r["r0"] else "expand"
-        name = f"fig5.live.{kind}.w{r['width']}.{r['r0']}to{r['r1']}"
+        name = (f"fig5.live.{kind}.w{r['width']}.{r['r0']}to{r['r1']}"
+                f".{r['path']}")
         emit(name, r["total"] * 1e6,
              f"lb={r['load_balance']:.3f};ckpt={r['checkpoint']:.3f};"
              f"restart={r['restart']:.3f};restore={r['restore']:.3f}")
-    if not rows:
-        emit("fig5.live.FAILED", 0.0, proc.stderr[-200:].replace(",", ";"))
+
+
+def _kernel_rows():
+    """Slow-lane fig5 kernel section: fused Pallas pack vs. per-leaf
+    device_get for the device->host snapshot (grounds the fast-lane
+    reshard-bandwidth constants)."""
+    rows = _helper_rows(KERNEL_HELPER, "kernel")
+    by_case = {}
+    mode = rows[0]["mode"] if rows else "?"
+    for r in rows:
+        name = f"fig5.kernel.snapshot.{r['kind']}.l{r['leaves']}x{r['elems']}"
+        emit(name, r["seconds"] * 1e6,
+             f"leaves={r['leaves']};elems={r['elems']};mode={r['mode']}")
+        by_case.setdefault((r["leaves"], r["elems"]), {})[r["kind"]] = \
+            r["seconds"]
+    for (leaves, elems), d in sorted(by_case.items()):
+        if "perleaf" in d and "packed" in d:
+            emit(f"fig5.kernel.pack_speedup.l{leaves}x{elems}", 0.0,
+                 kv(f"{d['perleaf'] / d['packed']:.2f}x",
+                    perleaf_s=d["perleaf"], packed_s=d["packed"], mode=mode))
 
 
 def _sim_phase_rows():
@@ -96,21 +154,32 @@ def _sim_phase_rows():
 def run(sim_only: bool = False):
     if not sim_only:
         _live_rows()
+        _kernel_rows()
 
-    # analytic model (paper Fig. 5a/5b/5c shapes)
+    # analytic model (paper Fig. 5a/5b/5c shapes), fast lane (the default
+    # the simulator prices) + legacy (paper-faithful synchronous path), and
+    # the gating verdict: fast lane must cut every sweep point >=5x
     from repro.core.perf_model import RescaleModel
-    rm = RescaleModel()
-    for p in (4, 8, 16, 32, 64):                      # 5a: shrink p -> p/2
-        st = rm.stages(p, p // 2, 2 * 4.0 * 8192 ** 2)
-        emit(f"fig5.model.shrink_half.p{p}", sum(st.values()) * 1e6,
+    sweeps = ([("shrink_half", f"p{p}", p, p // 2, 2 * 4.0 * 8192 ** 2)
+               for p in (4, 8, 16, 32, 64)]            # 5a: shrink p -> p/2
+              + [("expand_double", f"p{p}", p, 2 * p, 2 * 4.0 * 8192 ** 2)
+                 for p in (4, 8, 16, 32)]              # 5b: expand p -> 2p
+              + [("shrink32to16", f"n{n}", 32, 16, 2 * 4.0 * n ** 2)
+                 for n in (1024, 4096, 8192, 16384, 23000)])  # 5c: size sweep
+    fast, legacy = RescaleModel(), RescaleModel(fast_lane=False)
+    worst = None
+    for sweep, pt, r0, r1, nbytes in sweeps:
+        st = fast.stages(r0, r1, nbytes)
+        st_l = legacy.stages(r0, r1, nbytes)
+        emit(f"fig5.model.{sweep}.{pt}", sum(st.values()) * 1e6,
              ";".join(f"{k}={v:.3f}" for k, v in st.items()))
-    for p in (4, 8, 16, 32):                          # 5b: expand p -> 2p
-        st = rm.stages(p, 2 * p, 2 * 4.0 * 8192 ** 2)
-        emit(f"fig5.model.expand_double.p{p}", sum(st.values()) * 1e6,
-             ";".join(f"{k}={v:.3f}" for k, v in st.items()))
-    for n in (1024, 4096, 8192, 16384, 23000):        # 5c: 32 -> 16, size sweep
-        st = rm.stages(32, 16, 2 * 4.0 * n ** 2)
-        emit(f"fig5.model.shrink32to16.n{n}", sum(st.values()) * 1e6,
-             ";".join(f"{k}={v:.3f}" for k, v in st.items()))
+        emit(f"fig5.model_legacy.{sweep}.{pt}", sum(st_l.values()) * 1e6,
+             ";".join(f"{k}={v:.3f}" for k, v in st_l.items()))
+        ratio = sum(st_l.values()) / sum(st.values())
+        if worst is None or ratio < worst[0]:
+            worst = (ratio, f"{sweep}.{pt}")
+    emit("fig5.verdict.fastlane_speedup", 0.0, kv(
+        "PASS" if worst[0] >= 5.0 else "FAIL",
+        min_ratio=round(worst[0], 2), at=worst[1], points=len(sweeps)))
 
     _sim_phase_rows()

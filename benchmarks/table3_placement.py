@@ -28,7 +28,10 @@ from repro.core.simulator import jacobi_workload, make_jacobi_jobs
 SLOTS_PER_NODE = 8
 PRICE_OD = 0.048
 PRICE_SPOT = 0.016
-SEEDS = (7, 11, 23, 31, 43)
+# 10 seeds: the idle-$ gap is a ~20% effect over noisy per-seed values
+# (spread occasionally drains a node early), and the fast-lane rescale costs
+# shifted completion timings enough that 5 seeds no longer separate the means
+SEEDS = (7, 11, 23, 31, 43, 3, 17, 59, 71, 97)
 # 20 s gaps keep many jobs in flight at once (placement only discriminates
 # under concurrency: a serial stream parks one job per cluster)
 SUBMISSION_GAP = 20.0

@@ -174,7 +174,48 @@ def run():
             xfer_zone_spread=zs["xfer"], xfer_pack=pack["xfer"]))
     emit("table5.verdict.zone_spread_absorbs_correlated_reclaims", 0.0,
          "PASS" if all_ok else "FAIL")
+    _delta_ckpt_gate()
     return agg
+
+
+def _delta_ckpt_gate():
+    """CSV-gate row: on a table5-shaped per-slot state (mostly-cold weights +
+    a hot optimizer minority, the 2 GB/slot physics scaled to MBs for CI),
+    the delta checkpoint must write strictly fewer bytes than the full
+    snapshot it follows."""
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.checkpoint import DiskCheckpointStore
+
+    rng = np.random.default_rng(0)
+    cold = {f"layer{i}": rng.standard_normal(65536).astype(np.float32)
+            for i in range(8)}                       # frozen between preempts
+    hot = {f"slab{i}": rng.standard_normal(16384).astype(np.float32)
+           for i in range(4)}                        # churns every step
+    root = tempfile.mkdtemp(prefix="table5_ckpt_")
+    try:
+        store = DiskCheckpointStore(root)
+        store.save("physics", 100, {"weights": cold, "opt": hot})
+        full_bytes = store.last_bytes_written
+        hot2 = {k: v + 0.1 for k, v in hot.items()}
+        store.save("physics", 200, {"weights": cold, "opt": hot2}, delta=True)
+        delta_bytes = store.last_bytes_written
+        flat, manifest = store.load("physics")
+        intact = (manifest["delta"]
+                  and all(np.array_equal(flat[f"weights/{k}"], cold[k])
+                          for k in cold)
+                  and all(np.array_equal(flat[f"opt/{k}"], hot2[k])
+                          for k in hot2))
+        ok = intact and delta_bytes < full_bytes
+        emit("table5.verdict.delta_ckpt_writes_less", 0.0, kv(
+            "PASS" if ok else "FAIL", full_bytes=full_bytes,
+            delta_bytes=delta_bytes,
+            ratio=round(delta_bytes / full_bytes, 3)))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
 
 
 if __name__ == "__main__":

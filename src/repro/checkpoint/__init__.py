@@ -1,9 +1,12 @@
 from repro.checkpoint.memory import MemoryCheckpointStore
 from repro.checkpoint.disk import DiskCheckpointStore
+from repro.checkpoint.async_ckpt import AsyncCheckpointer
 from repro.checkpoint.reshard import (device_reshard, flatten_tree,
                                       restore_from_host, snapshot_to_host,
+                                      surviving_devices, tree_path_keys,
                                       unflatten_tree)
 
-__all__ = ["MemoryCheckpointStore", "DiskCheckpointStore", "device_reshard",
-           "snapshot_to_host", "restore_from_host", "flatten_tree",
-           "unflatten_tree"]
+__all__ = ["MemoryCheckpointStore", "DiskCheckpointStore", "AsyncCheckpointer",
+           "device_reshard", "snapshot_to_host", "restore_from_host",
+           "flatten_tree", "unflatten_tree", "tree_path_keys",
+           "surviving_devices"]

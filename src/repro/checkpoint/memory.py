@@ -20,10 +20,14 @@ class MemoryCheckpointStore:
         self._store: Dict[str, Dict[str, np.ndarray]] = {}
         self._meta: Dict[str, dict] = {}
 
-    def save(self, job_id: str, tree, meta: Optional[dict] = None) -> float:
-        """Checkpoint ``tree`` under ``job_id``; returns seconds taken."""
+    def save(self, job_id: str, tree, meta: Optional[dict] = None, *,
+             fused: bool = False) -> float:
+        """Checkpoint ``tree`` under ``job_id``; returns seconds taken.
+
+        ``fused=True`` routes the device→host copies through the Pallas
+        pack kernel (one transfer per dtype group)."""
         t0 = time.perf_counter()
-        self._store[job_id] = snapshot_to_host(tree)
+        self._store[job_id] = snapshot_to_host(tree, fused=fused)
         self._meta[job_id] = dict(meta or {}, saved_at=time.time())
         return time.perf_counter() - t0
 

@@ -1,44 +1,84 @@
 """Cross-mesh resharding of pytrees — the mechanism behind shrink/expand.
 
-Two paths (DESIGN.md §2):
+Three paths (DESIGN.md §2, README §Checkpoint fast lane):
 
 - paper-faithful: ``snapshot_to_host`` (checkpoint to host RAM, the /dev/shm
   analog) then ``restore_from_host`` with the new mesh's shardings;
 - beyond-paper: ``device_reshard`` — a single ``jax.device_put`` straight onto
-  the new shardings, letting the runtime move bytes device-to-device.
+  the new shardings, letting the runtime move bytes device-to-device.  This
+  is the DEFAULT rescale path whenever source devices survive the resize
+  (``surviving_devices`` detects the overlap);
+- fused: ``snapshot_to_host(tree, fused=True)`` coalesces the per-leaf
+  device->host copies through the Pallas pack kernel
+  (``repro.kernels.pack``) — one contiguous transfer per dtype group
+  instead of one small copy per leaf.
+
+Path keys: every leaf is addressed by a stable ``a/b/0/c``-style string.
+``GetAttrKey`` entries (NamedTuple / registered-dataclass pytrees) resolve
+via ``.name`` — probing only ``.key``/``.idx`` used to stringify them as
+``GetAttrKey(name='w')`` fragments like ``layer/.w``.  Literal ``/`` inside
+dict keys is escaped (``%`` then ``/``) so ``{"a/b": x}`` can never collide
+with ``{"a": {"b": x}}``.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
 
 
+def _escape(part: str) -> str:
+    """Escape a single path component so '/' stays a reserved separator."""
+    return part.replace("%", "%25").replace("/", "%2F")
+
+
+def _path_part(entry) -> str:
+    """One pytree path entry -> string.  jax emits DictKey(.key),
+    SequenceKey(.idx), GetAttrKey(.name), FlattenedIndexKey(.key); custom
+    pytrees may emit anything — fall back to str(entry)."""
+    for attr in ("key", "idx", "name"):
+        v = getattr(entry, attr, None)
+        if v is not None:
+            return _escape(str(v))
+    return _escape(str(entry))
+
+
+def tree_path_keys(tree) -> List[Tuple[str, object]]:
+    """[(stable 'a/b/c' key, leaf)] in tree_flatten_with_path order."""
+    return [("/".join(_path_part(p) for p in path), leaf)
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
 def flatten_tree(tree, prefix: str = "") -> Dict[str, object]:
     """pytree -> flat {'a/b/c': leaf} dict (stable, path-keyed)."""
     flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        flat[prefix + key] = leaf
+    for key, leaf in tree_path_keys(tree):
+        full = prefix + key
+        if full in flat:            # escaping makes this unreachable for
+            raise ValueError(       # builtin containers; guard custom nodes
+                f"duplicate pytree path key {full!r}")
+        flat[full] = leaf
     return flat
 
 
 def unflatten_tree(template, flat: Dict[str, object], prefix: str = ""):
     """Rebuild a pytree shaped like ``template`` from a flat dict."""
-    paths = jax.tree_util.tree_flatten_with_path(template)[0]
-    leaves = []
-    for path, _ in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        leaves.append(flat[prefix + key])
+    leaves = [flat[prefix + key] for key, _ in tree_path_keys(template)]
     treedef = jax.tree_util.tree_structure(template)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def snapshot_to_host(tree) -> Dict[str, np.ndarray]:
-    """Device -> host-RAM snapshot (the paper's shared-memory checkpoint)."""
+def snapshot_to_host(tree, *, fused: bool = False) -> Dict[str, np.ndarray]:
+    """Device -> host-RAM snapshot (the paper's shared-memory checkpoint).
+
+    ``fused=True`` routes the copies through the Pallas pack kernel: leaves
+    are gathered into one contiguous device buffer per dtype group and the
+    host sees one large transfer instead of len(tree) small ones (the fig5
+    slow-lane microbench quantifies the difference)."""
+    if fused:
+        from repro.kernels.pack import packed_snapshot_to_host
+        return packed_snapshot_to_host(tree)
     flat = flatten_tree(tree)
     arrs = jax.device_get(list(flat.values()))
     return {k: np.asarray(v) for k, v in zip(flat.keys(), arrs)}
@@ -53,3 +93,12 @@ def restore_from_host(host_flat: Dict[str, np.ndarray], template, shardings):
 def device_reshard(tree, shardings):
     """Live device-to-device reshard (no host round-trip)."""
     return jax.device_put(tree, shardings)
+
+
+def surviving_devices(old: Sequence, new: Sequence) -> int:
+    """How many of the OLD device set survive into the NEW one — the
+    condition under which peer-to-peer resharding can skip the host
+    round-trip (some source shards are already resident where the runtime
+    can move them device-to-device)."""
+    new_ids = {d.id for d in new}
+    return sum(1 for d in old if d.id in new_ids)

@@ -29,8 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import (MemoryCheckpointStore, device_reshard,
-                              restore_from_host, snapshot_to_host,
+from repro.checkpoint import (AsyncCheckpointer, MemoryCheckpointStore,
+                              device_reshard, restore_from_host,
+                              snapshot_to_host, surviving_devices,
                               unflatten_tree)
 from repro.configs.base import ModelConfig
 from repro.data import make_stream
@@ -46,12 +47,14 @@ class RescaleTimings:
     checkpoint: float = 0.0
     restart: float = 0.0
     restore: float = 0.0
+    path: str = "host"          # "p2p" (device-to-device) or "host"
 
     @property
     def total(self) -> float:
         return self.load_balance + self.checkpoint + self.restart + self.restore
 
     def as_dict(self) -> Dict[str, float]:
+        # numeric-only: consumers format every value as seconds
         return {"load_balance": self.load_balance, "checkpoint": self.checkpoint,
                 "restart": self.restart, "restore": self.restore,
                 "total": self.total}
@@ -88,7 +91,10 @@ class ElasticTrainer:
 
         # initial "restart" (mesh + compile) and state init
         t0 = time.perf_counter()
-        self._build_mesh(devices)
+        self._mesh_cache: Dict[tuple, dict] = {}
+        self._async_ckpt: Optional[AsyncCheckpointer] = None
+        self.validate_devices(devices)
+        self._ensure_mesh(devices)
         key = jax.random.PRNGKey(job.seed)
         with axis_rules(self.rules):
             self.params = jax.jit(
@@ -97,12 +103,60 @@ class ElasticTrainer:
             self.opt_state = jax.jit(
                 adamw_init, out_shardings=self._opt_sh)(self.params)
         self._compile()
+        self._mesh_cache[self._mesh_key(devices)]["compiled"] = self._compiled
         self.startup_time = time.perf_counter() - t0
 
     # -- mesh / sharding ------------------------------------------------------
     @property
     def replicas(self) -> int:
         return self.mesh.shape["data"]
+
+    def validate_devices(self, devices: Sequence) -> int:
+        """Check a target device set BEFORE any rescale stage runs.
+
+        An indivisible global_batch/replica combination used to surface as a
+        bare AssertionError from ``_build_mesh`` — after the checkpoint stage
+        had already burned a full snapshot.  Returns the replica count."""
+        devices = list(devices)
+        m = self.job.model_axis
+        if not devices:
+            raise ValueError("rescale target has no devices")
+        if len(devices) % m != 0:
+            raise ValueError(
+                f"{len(devices)} devices not divisible by model_axis {m}")
+        r = len(devices) // m
+        if self.job.global_batch % r != 0:
+            raise ValueError(
+                f"global_batch {self.job.global_batch} not divisible by "
+                f"{r} replicas")
+        return r
+
+    @staticmethod
+    def _mesh_key(devices: Sequence) -> tuple:
+        return tuple(d.id for d in devices)
+
+    def _ensure_mesh(self, devices: Sequence) -> bool:
+        """Build (or restore from cache) mesh/shardings for ``devices``.
+
+        Returns True on a cache hit — a previously-visited device set skips
+        the re-jit entirely, which is what makes repeated shrink⇄expand
+        oscillation cheap (the 'warm restart' the fast-lane perf model
+        prices)."""
+        key = self._mesh_key(devices)
+        cached = self._mesh_cache.get(key)
+        if cached is not None and cached.get("compiled") is not None:
+            for attr, v in cached.items():
+                if attr != "compiled":
+                    setattr(self, attr, v)
+            self._compiled = cached["compiled"]
+            return True
+        self._build_mesh(devices)
+        self._mesh_cache[key] = {
+            "devices": self.devices, "mesh": self.mesh, "rules": self.rules,
+            "_param_sh": self._param_sh, "_opt_sh": self._opt_sh,
+            "_batch_sh": self._batch_sh, "_scalar_sh": self._scalar_sh,
+            "compiled": None}
+        return False
 
     def _build_mesh(self, devices: Sequence):
         devices = list(devices)
@@ -181,10 +235,20 @@ class ElasticTrainer:
     def done(self) -> bool:
         return self.step_idx >= self.job.total_steps
 
-    def rescale(self, devices: Sequence, *, via_host: bool = True
+    def rescale(self, devices: Sequence, *, via_host: Optional[bool] = None
                 ) -> RescaleTimings:
-        """Shrink or expand onto ``devices`` (paper §3.1 shrink/expand)."""
-        t = RescaleTimings()
+        """Shrink or expand onto ``devices`` (paper §3.1 shrink/expand).
+
+        ``via_host=None`` (the default) picks the path automatically: when
+        any source device survives into the target set, state moves
+        peer-to-peer with a single ``jax.device_put`` (no host round-trip);
+        when the sets are disjoint — a full migration — it falls back to the
+        host-snapshot path.  Pass ``via_host=True``/``False`` to force."""
+        devices = list(devices)
+        self.validate_devices(devices)
+        if via_host is None:
+            via_host = surviving_devices(self.devices, devices) == 0
+        t = RescaleTimings(path="host" if via_host else "p2p")
 
         t0 = time.perf_counter()
         # load balance: re-split the data stream over the new replica count
@@ -201,8 +265,10 @@ class ElasticTrainer:
 
         old_params, old_opt = self.params, self.opt_state
         t0 = time.perf_counter()
-        self._build_mesh(devices)
-        self._compile()
+        if not self._ensure_mesh(devices):
+            self._compile()
+            self._mesh_cache[self._mesh_key(devices)]["compiled"] = \
+                self._compiled
         t.restart = time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -226,9 +292,31 @@ class ElasticTrainer:
         return {"params": self.params, "opt": self.opt_state,
                 "step": jnp.asarray(self.step_idx, jnp.int32)}
 
-    def save_disk(self, store, job_id: str) -> float:
+    def save_disk(self, store, job_id: str, *, delta: bool = False,
+                  fused: bool = False) -> float:
         return store.save(job_id, self.step_idx, self.state_tree(),
-                          meta={"replicas": self.replicas})
+                          meta={"replicas": self.replicas}, delta=delta,
+                          fused=fused)
+
+    def save_disk_async(self, store, job_id: str, *, delta: bool = True,
+                        fused: bool = False) -> None:
+        """Snapshot now, write to disk in the background (fast lane).
+
+        Training may continue immediately; call ``ckpt_barrier()`` before
+        the job's slots are released (preempt) so ``latest_step`` is a fully
+        published checkpoint."""
+        if self._async_ckpt is None or self._async_ckpt.store is not store:
+            if self._async_ckpt is not None:
+                self._async_ckpt.close()
+            self._async_ckpt = AsyncCheckpointer(store, delta=delta)
+        self._async_ckpt.delta = delta
+        self._async_ckpt.submit(job_id, self.step_idx, self.state_tree(),
+                                meta={"replicas": self.replicas}, fused=fused)
+
+    def ckpt_barrier(self) -> None:
+        """Join all pending async checkpoint writes (preempt-time barrier)."""
+        if self._async_ckpt is not None:
+            self._async_ckpt.barrier()
 
     def restore_disk(self, store, job_id: str) -> int:
         """Restart-from-checkpoint (the paper's extra restart flag)."""

@@ -7,9 +7,11 @@ event-loop refactor starts.  This is it:
 - **baseline diff** — every job-count rung's events/sec must be within
   ``throughput_rel_tol`` of ``benchmarks/baselines/BENCH_simcore.baseline.
   json`` (default 15%, so a 20% regression trips), peak RSS within
-  ``rss_rel_tol``, and the machine-independent invariants must hold
-  outright: composed null-tracer overhead < 3%, active-tracer overhead
-  under its ceiling, schema keys present.
+  ``rss_rel_tol``, ckpt save walls within ``ckpt_rel_tol``, and the
+  machine-independent invariants must hold outright: composed null-tracer
+  overhead < 3%, active-tracer overhead under its ceiling, delta
+  checkpoints writing strictly fewer bytes than full snapshots, the async
+  barrier publishing the last submitted step, schema keys present.
 - **anomaly scan** — :func:`rolling_median_spikes` flags points that jump
   ``spike_factor``x above the rolling median of their trailing window;
   :func:`scan_trace` applies it to the per-completion response-time stream
@@ -54,6 +56,9 @@ class WatchdogConfig:
     #: faster untraced grid reads as ~40%, with file-write noise swinging
     #: it 37-65% run to run)
     active_overhead_pct_max: Optional[float] = 90.0
+    #: ckpt save walls may grow at most this fraction vs. baseline (disk
+    #: speed varies across runners far more than CPU throughput does)
+    ckpt_rel_tol: float = 1.0
     #: anomaly scan: a point is a spike if > factor x rolling median
     spike_factor: float = 3.0
     spike_window: int = 9
@@ -120,6 +125,21 @@ def diff_snapshots(fresh: Dict[str, Any], baseline: Dict[str, Any],
     if fresh.get("schema", 0) >= 3:
         if not fresh.get("fleet"):
             rep.fail("schema", "schema>=3 snapshot missing 'fleet' rows")
+    if fresh.get("schema", 0) >= 4:
+        if not fresh.get("ckpt"):
+            rep.fail("schema", "schema>=4 snapshot missing 'ckpt' rows")
+
+    # -- checkpoint fast-lane invariants (always; machine-independent) -------
+    ckpt = fresh.get("ckpt")
+    if ckpt:
+        rep.passed("ckpt_invariants")
+        if not ckpt.get("delta_bytes", 0) < ckpt.get("full_bytes", 0):
+            rep.fail("ckpt_invariants",
+                     f"delta checkpoint wrote {ckpt.get('delta_bytes')} bytes"
+                     f" >= full snapshot {ckpt.get('full_bytes')}")
+        if not ckpt.get("async_published_latest", False):
+            rep.fail("ckpt_invariants",
+                     "async barrier did not publish the last submitted step")
 
     # -- null-tracer overhead (always; machine-independent ratio) ------------
     rep.passed("null_overhead")
@@ -187,6 +207,18 @@ def diff_snapshots(fresh: Dict[str, Any], baseline: Dict[str, Any],
                          f"{name}: {f:.0f} retired events/s is "
                          f"{100.0 * (1.0 - f / b):.1f}% below baseline "
                          f"{b:.0f} (tol {100.0 * cfg.fleet_rel_tol:.0f}%)")
+
+    # -- checkpoint save walls vs. baseline (schema 4) -----------------------
+    base_ckpt = baseline.get("ckpt")
+    if base_ckpt and ckpt:
+        rep.passed("ckpt")
+        for field_name in ("full_save_us", "delta_save_us"):
+            b, f = base_ckpt.get(field_name, 0.0), ckpt.get(field_name, 0.0)
+            if b > 0.0 and f > b * (1.0 + cfg.ckpt_rel_tol):
+                rep.fail("ckpt",
+                         f"{field_name}: {f:.0f}us is "
+                         f"{100.0 * (f / b - 1.0):.1f}% above baseline "
+                         f"{b:.0f}us (tol {100.0 * cfg.ckpt_rel_tol:.0f}%)")
 
     # -- peak RSS vs. baseline -----------------------------------------------
     rep.passed("peak_rss")

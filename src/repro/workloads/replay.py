@@ -29,6 +29,7 @@ from repro.cloud.provider import CloudProvider
 from repro.cloud.sim import CloudSimulator
 from repro.core.job import JobSpec
 from repro.core.metrics import ScheduleMetrics
+from repro.core.perf_model import RescaleModel
 from repro.core.policies import PolicyConfig
 from repro.core.simulator import SimWorkload, Simulator, variant_setup
 from repro.workloads.trace import Trace, TraceJob
@@ -65,6 +66,7 @@ class ReplayConfig:
     serial_fraction: float = 0.05   # Amdahl serial share
     bytes_per_slot: float = 2.0e8   # checkpoint footprint per natural slot
     rescale_gap: float = 180.0      # T_rescale_gap for elastic variants
+    fast_lane: bool = True          # checkpoint/reshard fast-lane cost model
 
     def __post_init__(self):
         assert self.cluster_slots >= 1
@@ -84,7 +86,8 @@ def compile_job(tj: TraceJob, cfg: ReplayConfig
     wl = SimWorkload(
         scaling=TraceScalingModel(natural, cfg.serial_fraction),
         total_work=tj.duration,                 # steps of 1 s at natural size
-        data_bytes=natural * cfg.bytes_per_slot)
+        data_bytes=natural * cfg.bytes_per_slot,
+        rescale=RescaleModel(fast_lane=cfg.fast_lane))
     return spec, wl
 
 

@@ -25,12 +25,13 @@ for _ in range(12):
 elastic = ElasticTrainer(cfg, job, devs[:4])
 for _ in range(4):
     elastic.step()
-t1 = elastic.rescale(devs[:2])                      # shrink (host path)
+t1 = elastic.rescale(devs[:2], via_host=True)       # shrink (forced host path)
 for _ in range(4):
     elastic.step()
-t2 = elastic.rescale(devs[:8], via_host=False)      # expand (device path)
+t2 = elastic.rescale(devs[:8])                      # expand (auto -> p2p)
 for _ in range(4):
     m_elastic = elastic.step()
+t3 = elastic.rescale(devs[:4])                      # revisit: warm mesh cache
 
 pa = jax.tree.leaves(jax.device_get(static.params))
 pb = jax.tree.leaves(jax.device_get(elastic.params))
@@ -45,9 +46,15 @@ print(f"LOSS_ERR {lerr:.3e}")
 print(f"LOSS_FIRST {la[0]:.4f} LOSS_LAST {la[-1]:.4f}")
 print(f"STAGES1 {t1.as_dict()}")
 print(f"STAGES2 {t2.as_dict()}")
+print(f"STAGES3 {t3.as_dict()}")
 assert perr < 5e-5, perr
 assert lerr < 5e-5, lerr
 assert la[-1] < la[0], "loss did not decrease"
 assert all(v >= 0 for v in t1.as_dict().values())
 assert t1.restart > 0, "restart (re-jit) must be nonzero"
+assert t1.path == "host" and t2.path == "p2p", (t1.path, t2.path)
+assert t2.checkpoint == 0.0, "p2p path must skip the host snapshot"
+# devs[:4] was compiled at startup: the revisit must hit the mesh cache and
+# skip the re-jit entirely (warm restart)
+assert t3.restart < 0.5 * t2.restart, (t3.restart, t2.restart)
 print("OK")

@@ -149,6 +149,39 @@ def test_blocked_attention_fwd_and_grads(B, S, H, KV, hd, bk):
                                    rtol=5e-4)
 
 
+# ---------------------------------------------------------------------------
+# fused checkpoint pack (fast-lane gather/pack)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shapes,dtype", [
+    ([(128,), (8, 128), (1000,)], jnp.float32),       # uneven lane padding
+    ([(256, 256), (1,), (3, 5, 7)], jnp.float32),     # big + scalarish + odd
+    ([(64, 64), (4096,)], jnp.bfloat16),              # sub-word dtype
+    ([(17,), (129,), (130, 2)], jnp.int32),           # all off-lane
+])
+def test_pack_kernel_sweep_vs_ref(shapes, dtype):
+    from repro.kernels.pack import pack_leaves_pallas, pack_leaves_ref
+    ks = jax.random.split(KEY, len(shapes))
+    if jnp.issubdtype(dtype, jnp.integer):
+        leaves = [jax.random.randint(k, s, -100, 100, dtype)
+                  for k, s in zip(ks, shapes)]
+    else:
+        leaves = [jax.random.normal(k, s, dtype) for k, s in zip(ks, shapes)]
+    out = pack_leaves_pallas(leaves, interpret=True)
+    exp = pack_leaves_ref(leaves)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("block_rows", [4, 8, 16])
+def test_pack_kernel_block_rows(block_rows):
+    from repro.kernels.pack import pack_leaves_pallas, pack_leaves_ref
+    leaves = [jax.random.normal(k, (n,))
+              for k, n in zip(jax.random.split(KEY, 3), (700, 129, 2048))]
+    out = pack_leaves_pallas(leaves, block_rows=block_rows, interpret=True)
+    exp = pack_leaves_ref(leaves, block_rows=block_rows)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
 def test_blocked_attention_non_causal_and_hdv():
     """Cross-attention form: no mask, v head dim differs from qk head dim."""
     B, Sq, Sk, H, hd, hdv = 2, 32, 48, 4, 16, 24
